@@ -1,0 +1,72 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir DIR] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import List
+
+
+def load(dir_: Path, mesh: str = "pod256", tag: str = "") -> List[dict]:
+    rows = []
+    for p in sorted(dir_.glob("*.json")):
+        d = json.loads(p.read_text())
+        if not d.get("ok") or "roofline" not in d:
+            continue
+        parts = d["cell"].split("__")
+        if len(parts) < 3:
+            continue  # special cells (paper-summarizer) — not arch x shape
+        cell_tag = parts[3] if len(parts) > 3 else ""
+        if parts[2] != mesh or cell_tag != tag:
+            continue
+        rows.append(d)
+    return rows
+
+
+def fmt_table(rows: List[dict], md: bool = False) -> List[str]:
+    out = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'bound':>10s} {'useful':>7s} {'roofl%':>7s}")
+    if md:
+        out.append("| arch | shape | compute_s | memory_s | collective_s |"
+                   " bound | useful_flops | roofline_frac |")
+        out.append("|---|---|---|---|---|---|---|---|")
+    else:
+        out.append(hdr)
+    for d in rows:
+        r = d["roofline"]
+        dom = r["dominant"].replace("_s", "")
+        if md:
+            out.append(
+                f"| {d['arch']} | {d['shape']} | {r['compute_s']:.3e} | "
+                f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {dom} | "
+                f"{r['useful_flops_ratio']:.3f} | "
+                f"{100 * r['roofline_fraction']:.1f}% |")
+        else:
+            out.append(
+                f"{d['arch']:22s} {d['shape']:12s} {r['compute_s']:10.3e} "
+                f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+                f"{dom:>10s} {r['useful_flops_ratio']:7.3f} "
+                f"{100 * r['roofline_fraction']:7.1f}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod256")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(Path(args.dir), args.mesh, args.tag)
+    print(f"roofline table ({args.mesh}"
+          + (f", tag={args.tag}" if args.tag else "") + f"): {len(rows)} cells")
+    for line in fmt_table(rows, args.md):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Batched serving example: prefill + greedy decode over a request batch,
+including a KV-cache summarization twist — ThreeSieves selects the most
+diverse requests from an incoming prompt stream for a priority batch
+(submodular admission control).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import CoresetSelector
+from repro.models import Model
+from repro.serve import ServeDriver
+
+cfg = get_config("qwen2-1.5b", reduced=True)
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+B, P, NEW = 4, 12, 12
+driver = ServeDriver(model=model, max_seq=P + NEW + 8, batch=B)
+
+# ---- submodular admission: pick the B most diverse prompts of a burst ----
+N_REQ = 64
+key = jax.random.PRNGKey(1)
+all_prompts = jax.random.randint(key, (N_REQ, P), 0, cfg.vocab, jnp.int32)
+# cheap prompt embedding: folded token histogram
+emb = jax.nn.one_hot(all_prompts % 32, 32).mean(1)
+sel = CoresetSelector(K=B, d=32, T=16, eps=0.1)
+sel.update(emb)
+idx = sel.assign(emb)  # bucket all requests against the summary
+feats, n, _ = sel.summary()
+# the selected batch: first request of each bucket
+chosen = jnp.array([int(jnp.argmax(idx == b)) for b in range(B)])
+batchp = all_prompts[chosen]
+print(f"admitted {B}/{N_REQ} maximally-diverse prompts "
+      f"(buckets sized {[int((idx == b).sum()) for b in range(B)]})")
+
+t0 = time.time()
+out = driver.generate(params, batchp, n_new=NEW)
+dt = time.time() - t0
+print(f"generated {out.shape} in {dt:.2f}s "
+      f"({B * NEW / dt:.1f} tok/s batched greedy on CPU)")
+print(out[:, P:])

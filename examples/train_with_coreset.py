@@ -1,0 +1,83 @@
+"""End-to-end training driver: a real LM trained for a few hundred steps
+with ThreeSieves coreset selection running as an always-on input-pipeline
+stage, fault-tolerant loop, and checkpointing.
+
+Default config is a ~15M-param qwen2-family model sized for this CPU
+container (a few hundred steps in minutes); ``--hundred-m`` scales to
+~100M params (same code path — run it on real hardware).
+
+    PYTHONPATH=src python examples/train_with_coreset.py --steps 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointStore
+from repro.configs import get_config
+from repro.data import CoresetSelector, TokenStreamSpec, token_stream
+from repro.models import Model
+from repro.train import AdamWConfig, init_opt_state, make_train_step
+from repro.train.loop import LoopConfig, run_training
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--hundred-m", action="store_true")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
+args = ap.parse_args()
+
+base = get_config("qwen2-1.5b", reduced=True)
+if args.hundred_m:
+    cfg = dataclasses.replace(base, name="qwen2-100m", n_layers=8,
+                              d_model=768, n_heads=12, n_kv_heads=4,
+                              head_dim=64, d_ff=2048, vocab=32_000)
+else:
+    cfg = dataclasses.replace(base, name="qwen2-15m", n_layers=4,
+                              d_model=256, n_heads=8, n_kv_heads=2,
+                              head_dim=32, d_ff=768, vocab=8_000)
+model = Model(cfg)
+print(f"model: {cfg.name}  params={cfg.param_count()/1e6:.1f}M")
+
+params = model.init(jax.random.PRNGKey(0))
+opt_cfg = AdamWConfig(lr=1e-3, total_steps=args.steps, warmup_steps=20)
+opt_state = init_opt_state(params, opt_cfg)
+train_step = jax.jit(make_train_step(model, opt_cfg))
+
+# ---- input pipeline: domain-mixture token stream + coreset selection ------
+spec = TokenStreamSpec(vocab=cfg.vocab, seq=args.seq, batch=args.batch,
+                       embed_d=32)
+stream = token_stream(0, spec)
+selector = CoresetSelector(K=32, d=32, T=2000, eps=0.01)
+cache = {}
+
+
+def next_batch(step):
+    if step not in cache:
+        batch, embeds = next(stream)
+        selector.update(embeds)  # always-on summarization of training data
+        cache.clear()
+        cache[step] = batch
+    return cache[step]
+
+
+store = CheckpointStore(args.ckpt_dir)
+loop_cfg = LoopConfig(total_steps=args.steps, ckpt_every=50, log_every=20)
+t0 = time.time()
+params, opt_state, report = run_training(
+    train_step, params, opt_state, next_batch, store, loop_cfg)
+dt = time.time() - t0
+tok_s = (report.end_step - report.start_step) * args.batch * args.seq / dt
+
+print(f"\ntrained steps {report.start_step}->{report.end_step} in {dt:.1f}s"
+      f" ({tok_s:.0f} tok/s on CPU)  final loss="
+      f"{report.last_metrics.get('loss'):.4f}")
+feats, n, fval = selector.summary()
+print(f"coreset summary of the training stream: {int(n)} examples, "
+      f"f(S)={float(fval):.3f}, accept-rate={selector.accept_rate:.5f}")
+print("-> the summary indexes the most diverse training documents; "
+      "sel.assign(embeds) buckets new data against it (curation, dedup, "
+      "drift monitoring)")

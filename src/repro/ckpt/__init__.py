@@ -1,0 +1,4 @@
+"""repro.ckpt — manifest checkpointing with elastic resharding."""
+from .store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

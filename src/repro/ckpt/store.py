@@ -1,0 +1,164 @@
+"""Fault-tolerant checkpointing: manifest + per-leaf raw tensors, async
+save, load-with-reshard (elastic mesh changes).
+
+Layout (one directory per step):
+
+    <root>/step_000123/
+        MANIFEST.json      tree structure, shapes, dtypes, step, extra meta
+        <leaf-key>.npy     one raw array per pytree leaf (host-gathered)
+        COMMITTED          written LAST — a directory without it is a torn
+                           save (preemption mid-write) and is ignored/GC'd.
+
+Restart semantics: ``latest_step`` scans for the highest COMMITTED step.
+Elastic resharding: arrays are saved unsharded (host-gathered); ``load``
+device_puts every leaf with the *target* sharding, which may come from a
+different mesh shape than the one that saved it — checkpoint format is
+mesh-agnostic by construction.
+
+The async path snapshots leaves to host (jax.device_get — a synchronization
+point, but off the critical path of the next step which runs on device) and
+writes files on a daemon thread; ``wait()`` joins before the next save or
+exit.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes  # registers bfloat16 & friends with numpy
+import numpy as np
+
+COMMIT_MARK = "COMMITTED"
+MANIFEST = "MANIFEST.json"
+
+
+def _flatten_with_keys(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_key_str(k) for k in path)
+        out[key] = leaf
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+class CheckpointStore:
+    def __init__(self, root: str | Path, keep: int = 3):
+        self.root = Path(root)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def _step_dir(self, step: int) -> Path:
+        return self.root / f"step_{step:09d}"
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> Path:
+        """Synchronous save: gather to host, write leaves, commit-mark."""
+        host = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+        return self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree, extra: Optional[Dict] = None):
+        """Snapshot to host now; write files on a daemon thread."""
+        self.wait()
+        host = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, extra or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree, extra: Dict) -> Path:
+        d = self._step_dir(step)
+        tmp = d.with_suffix(".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        leaves = _flatten_with_keys(host_tree)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "extra": extra,
+            "leaves": {},
+        }
+        for key, arr in leaves.items():
+            fname = key.replace("/", "__") + ".npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"][key] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
+        (tmp / COMMIT_MARK).write_text("ok")
+        if d.exists():
+            shutil.rmtree(d)
+        tmp.rename(d)
+        self._gc()
+        return d
+
+    def _gc(self):
+        steps = self.committed_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # torn saves (no commit mark) from preemptions
+        for p in self.root.glob("step_*"):
+            if p.is_dir() and not (p / COMMIT_MARK).exists() \
+                    and not p.suffix == ".tmp":
+                shutil.rmtree(p, ignore_errors=True)
+
+    # ------------------------------------------------------------------ load
+    def committed_steps(self):
+        out = []
+        for p in sorted(self.root.glob("step_*")):
+            if (p / COMMIT_MARK).exists():
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    def load(self, step: int, like, shardings=None) -> Tuple[Any, Dict]:
+        """Restore the pytree ``like`` (structure donor; leaves may be
+        ShapeDtypeStructs).  ``shardings`` (same structure, NamedShardings)
+        reshards onto the *current* mesh — elastic restart."""
+        d = self._step_dir(step)
+        manifest = json.loads((d / MANIFEST).read_text())
+        flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        sh_leaves = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "mesh"))
+            if shardings is not None else [None] * len(flat_like))
+        vals = []
+        for (path, leaf), sh in zip(flat_like, sh_leaves):
+            key = "/".join(_key_str(k) for k in path)
+            info = manifest["leaves"][key]
+            arr = np.load(d / info["file"])
+            want_dt = np.dtype(info["dtype"])
+            if arr.dtype != want_dt:
+                # np.save round-trips ml_dtypes (bf16, fp8) as raw void —
+                # reinterpret from the manifest's dtype record
+                arr = arr.view(want_dt)
+            want = tuple(leaf.shape)
+            assert tuple(arr.shape) == want, (key, arr.shape, want)
+            vals.append(jax.device_put(arr, sh) if sh is not None
+                        else jax.numpy.asarray(arr))
+        tree = jax.tree_util.tree_unflatten(treedef, vals)
+        return tree, manifest["extra"]

@@ -1,0 +1,37 @@
+"""mamba2-370m [ssm] — 48L d_model=1024, attention-free (SSD),
+ssm_state=128, vocab=50280.  [arXiv:2405.21060; unverified]"""
+from repro.models import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    n_layers=48,
+    d_model=1024,
+    n_heads=16,  # unused (attention-free); SSD heads come from SSMConfig
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=0,
+    vocab=50_280,
+    ssm=SSMConfig(d_state=128, head_dim=64, n_groups=1, expand=2),
+    layer_pattern="M",
+    ffn_pattern="-",
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=0,
+        vocab=512,
+        ssm=SSMConfig(d_state=16, head_dim=16, n_groups=1, expand=2,
+                      chunk=16),
+        layer_pattern="M",
+        ffn_pattern="-",
+        tie_embeddings=True,
+        remat=False,
+    )

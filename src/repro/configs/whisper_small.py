@@ -1,0 +1,40 @@
+"""whisper-small [audio] — enc-dec, 12L d_model=768 12H d_ff=3072
+vocab=51865; conv frontend is a STUB (input_specs provides precomputed
+frame embeddings, 1500 frames).  [arXiv:2212.04356; unverified]
+
+Deviation noted in DESIGN.md: the decoder uses RoPE instead of learned
+positional embeddings (FLOP-neutral); the encoder uses sinusoidal positions
+as in the paper.
+"""
+from repro.models import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab=51_865,
+    ffn="gelu",
+    norm="layernorm",
+    encoder=EncoderConfig(n_layers=12, n_frames=1500),
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab=512,
+        ffn="gelu",
+        norm="layernorm",
+        encoder=EncoderConfig(n_layers=2, n_frames=16),
+        remat=False,
+    )

@@ -1,0 +1,72 @@
+"""Uniform registry over all summary-selection algorithms.
+
+Every algorithm exposes::
+
+    algo.init()            -> state
+    algo.step(state, x)    -> state          (one stream item)
+    algo.run(state, X)     -> state          (scan over a chunk)
+    algo.summary(state)    -> (feats, n, fval)
+    algo.memory_elements(state)              (paper Table-1 metric)
+
+``make(name, K, d, ...)`` builds an algorithm bound to the paper's LogDet
+objective with the paper's kernel conventions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from .baselines import (IndependentSetImprovement, PreemptionStreaming,
+                        QuickStream, RandomReservoir)
+from .functions import KernelConfig, LogDet, rbf_lengthscale_batch
+from .greedy import Greedy
+from .salsa import Salsa
+from .sieves import SieveStreaming
+from .threesieves import ThreeSieves
+
+ALGORITHMS = (
+    "threesieves",
+    "sievestreaming",
+    "sievestreaming++",
+    "salsa",
+    "random",
+    "independentsetimprovement",
+    "preemptionstreaming",
+    "quickstream",
+    "greedy",
+)
+
+
+def make_objective(K: int, d: int, a: float = 1.0,
+                   lengthscale: float | None = None,
+                   kernel_kind: str = "rbf") -> LogDet:
+    if lengthscale is None:
+        lengthscale = rbf_lengthscale_batch(d)
+    return LogDet(K=K, d=d, a=a,
+                  kernel=KernelConfig(kind=kernel_kind, lengthscale=lengthscale))
+
+
+def make(name: str, K: int, d: int, *, a: float = 1.0,
+         lengthscale: float | None = None, eps: float = 0.1, T: int = 500,
+         c: int = 4, kernel_kind: str = "rbf") -> Any:
+    f = make_objective(K, d, a=a, lengthscale=lengthscale,
+                       kernel_kind=kernel_kind)
+    name = name.lower()
+    if name == "threesieves":
+        return ThreeSieves(f=f, T=T, eps=eps)
+    if name == "sievestreaming":
+        return SieveStreaming(f=f, eps=eps, plus_plus=False)
+    if name in ("sievestreaming++", "sievestreamingpp"):
+        return SieveStreaming(f=f, eps=eps, plus_plus=True)
+    if name == "salsa":
+        return Salsa(f=f, eps=eps)
+    if name == "random":
+        return RandomReservoir(f=f)
+    if name in ("independentsetimprovement", "isi"):
+        return IndependentSetImprovement(f=f)
+    if name in ("preemptionstreaming", "preemption"):
+        return PreemptionStreaming(f=f)
+    if name == "quickstream":
+        return QuickStream(f=f, c=c)
+    if name == "greedy":
+        return Greedy(f=f)
+    raise ValueError(f"unknown algorithm {name!r}; choose from {ALGORITHMS}")

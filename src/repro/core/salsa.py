@@ -1,0 +1,90 @@
+"""Salsa (Norouzi-Fard et al. 2018) — streaming variant.
+
+A meta-algorithm: several thresholding *rules* run in parallel, each over the
+full geometric ladder; the best resulting summary wins.  The exact rule set
+of the extended paper (Appendix E) is tuned to known stream length/density;
+our streaming port uses three length-free rule families (noted as a
+simplification in EXPERIMENTS.md §Repro):
+
+  rule 0 ("sieve")   thr = (v/2 - f(S)) / (K - |S|)      — SieveStreaming rule
+  rule 1 ("dense")   thr = v / (2K)                       — flat per-item rule
+  rule 2 ("eager")   thr = (2v/3 - f(S)) / (K - |S|)      — front-loaded rule
+
+Memory is rules x rungs summaries — the largest of all baselines, matching
+the paper's measurement that Salsa uses the most memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .functions import LogDet, LogDetState
+from .sieves import SieveState, _stack
+from .thresholds import Ladder
+
+Array = jax.Array
+
+NUM_RULES = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Salsa:
+    f: LogDet
+    eps: float = 0.1
+
+    @property
+    def ladder(self) -> Ladder:
+        return Ladder(eps=self.eps, m=self.f.singleton_value, K=self.f.K)
+
+    def init(self) -> SieveState:
+        n_inst = NUM_RULES * self.ladder.num_rungs
+        return SieveState(
+            lds=_stack(self.f.init(), n_inst),
+            alive=jnp.ones((n_inst,), bool),
+            lb=jnp.zeros((), jnp.float32),
+            n_queries=jnp.zeros((), jnp.int32),
+            peak_mem=jnp.zeros((), jnp.int32),
+        )
+
+    def _thresholds(self, fvals: Array, ns: Array) -> Array:
+        """(n_inst,) acceptance thresholds given per-instance f and |S|."""
+        nv = self.ladder.num_rungs
+        vs = jnp.tile(self.ladder.values(), NUM_RULES)  # (n_inst,)
+        rule = jnp.repeat(jnp.arange(NUM_RULES), nv)
+        denom = jnp.maximum(self.f.K - ns, 1).astype(fvals.dtype)
+        thr0 = (vs / 2.0 - fvals) / denom
+        thr1 = jnp.broadcast_to(vs / (2.0 * self.f.K), fvals.shape)
+        thr2 = (2.0 * vs / 3.0 - fvals) / denom
+        return jnp.select([rule == 0, rule == 1, rule == 2], [thr0, thr1, thr2])
+
+    def step(self, state: SieveState, x: Array) -> SieveState:
+        f = self.f
+        thr = self._thresholds(state.lds.fval, state.lds.n)
+
+        def one(ld: LogDetState, t: Array) -> LogDetState:
+            gain = f.gain1(ld, x)
+            take = (gain >= t) & (ld.n < f.K)
+            return f.maybe_append(ld, x, take)
+
+        lds = jax.vmap(one, in_axes=(0, 0))(state.lds, thr)
+        nq = state.n_queries + thr.shape[0]
+        peak = jnp.maximum(state.peak_mem, jnp.sum(lds.n))
+        return SieveState(lds=lds, alive=state.alive, lb=state.lb,
+                          n_queries=nq, peak_mem=peak)
+
+    def run(self, state: SieveState, X: Array) -> SieveState:
+        def body(s, x):
+            return self.step(s, x), None
+
+        out, _ = jax.lax.scan(body, state, X)
+        return out
+
+    def summary(self, state: SieveState) -> Tuple[Array, Array, Array]:
+        i = jnp.argmax(state.lds.fval)
+        return state.lds.feats[i], state.lds.n[i], state.lds.fval[i]
+
+    def memory_elements(self, state: SieveState) -> Array:
+        return jnp.sum(state.lds.n)

@@ -1,0 +1,176 @@
+"""ThreeSieves (the paper's contribution) as a jittable JAX state machine.
+
+Two execution paths with *identical* semantics (tested bit-equal):
+
+  * ``run``          — faithful per-item ``lax.scan`` (Algorithm 1 verbatim),
+  * ``run_batched``  — TPU fast path: one fused gain matmul per state change
+                       plus closed-form rejection arithmetic (DESIGN.md §3).
+
+The batched path exploits the paper's own premise — acceptances are rare —
+so the expected number of fused oracle passes per batch is
+1 + (#accepts in the batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .functions import LogDet, LogDetState
+from .thresholds import Ladder
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TSState:
+    ld: LogDetState
+    j: Array  # () int32 — current rung of the threshold ladder
+    t: Array  # () int32 — consecutive rejections at the current rung
+    n_fused: Array  # () int32 — fused batch oracle passes (metrics)
+
+
+@dataclasses.dataclass(frozen=True)
+class ThreeSieves:
+    """ThreeSieves(K, T, eps) over the LogDet objective.
+
+    ``T`` is the Rule-of-Three observation count: after T consecutive
+    rejections the current threshold is discarded with confidence
+    p <= -ln(alpha)/T.
+    """
+
+    f: LogDet
+    T: int = 500
+    eps: float = 1e-3
+
+    @property
+    def ladder(self) -> Ladder:
+        return Ladder(eps=self.eps, m=self.f.singleton_value, K=self.f.K)
+
+    @staticmethod
+    def T_from_alpha_tau(alpha: float, tau: float) -> int:
+        """Eq. (3): T = -ln(alpha)/tau  (the Rule-of-Three inverted)."""
+        import math
+
+        return int(math.ceil(-math.log(alpha) / tau))
+
+    # ------------------------------------------------------------------ state
+    def init(self) -> TSState:
+        z = jnp.zeros((), jnp.int32)
+        return TSState(ld=self.f.init(), j=z, t=z, n_fused=z)
+
+    def _threshold(self, ld: LogDetState, j: Array) -> Array:
+        v = self.ladder.value(j)
+        denom = jnp.maximum(self.f.K - ld.n, 1).astype(ld.fval.dtype)
+        return (v / 2.0 - ld.fval) / denom
+
+    # ------------------------------------------------------------- Algorithm 1
+    def step(self, state: TSState, x: Array) -> TSState:
+        """Process one stream item (lines 4-12 of Algorithm 1)."""
+        f = self.f
+        ld = state.ld
+        gain = f.gain1(ld, x)
+        thr = self._threshold(ld, state.j)
+        accept = (gain >= thr) & (ld.n < f.K)
+
+        ld2 = f.maybe_append(ld, x, accept)
+        # reject branch: t += 1; if t >= T: lower rung, t = 0
+        t_rej = state.t + 1
+        lower = t_rej >= self.T
+        j_rej = jnp.where(lower, jnp.minimum(state.j + 1, self.ladder.num_rungs - 1),
+                          state.j)
+        t_rej = jnp.where(lower, 0, t_rej)
+
+        j = jnp.where(accept, state.j, j_rej)
+        t = jnp.where(accept, 0, t_rej)
+        ld2 = dataclasses.replace(ld2, n_queries=ld.n_queries + 1)
+        return TSState(ld=ld2, j=j, t=t, n_fused=state.n_fused)
+
+    def run(self, state: TSState, X: Array) -> TSState:
+        """Faithful scan over a chunk of the stream X (B, d)."""
+        def body(s, x):
+            return self.step(s, x), None
+
+        out, _ = jax.lax.scan(body, state, X)
+        return out
+
+    # ---------------------------------------------------------- TPU fast path
+    def run_batched(self, state: TSState, X: Array) -> TSState:
+        """Semantically identical to ``run`` — one fused gain pass per accept.
+
+        Rejections are consumed in closed form:  processing r consecutive
+        rejections starting from counter t advances the rung by
+        (t + r) // T and leaves the counter at (t + r) % T.  Thresholds seen
+        by item p (given no earlier accept) are therefore computable for the
+        whole batch at once from a single gains vector.
+        """
+        f, T, B = self.f, self.T, X.shape[0]
+        nr = self.ladder.num_rungs
+        r_idx = jnp.arange(B, dtype=jnp.int32)
+
+        def consume_all(j, t, steps):
+            lowered = (t + steps) // T
+            return (jnp.minimum(j + lowered, nr - 1), (t + steps) % T)
+
+        def cond(carry):
+            _, _, _, cursor, _, _, _ = carry
+            return cursor < B
+
+        def body(carry):
+            ld, j, t, cursor, gains, valid, n_fused = carry
+
+            def recompute():
+                return f.gains(ld, X), n_fused + 1
+
+            gains, n_fused = jax.lax.cond(
+                valid, lambda: (gains, n_fused), recompute)
+
+            # -- full summary: everything left is a rejection --------------
+            def when_full():
+                j2, t2 = consume_all(j, t, B - cursor)
+                return ld, j2, t2, jnp.int32(B), gains, True, n_fused
+
+            # -- live summary: find the first acceptor ----------------------
+            def when_live():
+                r = r_idx - cursor  # position within the remaining suffix
+                j_p = jnp.minimum(j + (t + r) // T, nr - 1)
+                v_p = self.ladder.value(j_p)
+                denom = jnp.maximum(f.K - ld.n, 1).astype(ld.fval.dtype)
+                thr_p = (v_p / 2.0 - ld.fval) / denom
+                acc = (gains >= thr_p) & (r_idx >= cursor)
+                exists = jnp.any(acc)
+                istar = jnp.argmax(acc)  # first True
+
+                def on_accept():
+                    rstar = istar - cursor
+                    j2 = jnp.minimum(j + (t + rstar) // T, nr - 1)
+                    ld2 = f.append(ld, X[istar])
+                    return (ld2, j2, jnp.int32(0), istar + 1,
+                            gains, False, n_fused)
+
+                def on_no_accept():
+                    j2, t2 = consume_all(j, t, B - cursor)
+                    return ld, j2, t2, jnp.int32(B), gains, True, n_fused
+
+                return jax.lax.cond(exists, on_accept, on_no_accept)
+
+            return jax.lax.cond(ld.n >= f.K, when_full, when_live)
+
+        gains0 = jnp.zeros((B,), jnp.float32)
+        ld, j, t, _, _, _, n_fused = jax.lax.while_loop(
+            cond, body,
+            (state.ld, state.j, state.t, jnp.int32(0), gains0, False,
+             state.n_fused),
+        )
+        ld = dataclasses.replace(ld, n_queries=ld.n_queries + B)
+        return TSState(ld=ld, j=j, t=t, n_fused=n_fused)
+
+    # ---------------------------------------------------------------- metrics
+    def summary(self, state: TSState) -> Tuple[Array, Array, Array]:
+        return state.ld.feats, state.ld.n, state.ld.fval
+
+    def memory_elements(self, state: TSState) -> int:
+        return self.f.K  # a single summary — the paper's O(K)

@@ -1,0 +1,44 @@
+"""The geometric threshold ladder  O = {(1+eps)^i : m <= (1+eps)^i <= K*m}.
+
+ThreeSieves never materializes O — thresholds are computed from the rung
+index on the fly (paper, proof of Thm. 1).  SieveStreaming(++) / Salsa
+materialize one summary per rung, which is exactly the memory blow-up the
+paper removes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Ladder:
+    """Rungs are indexed j = 0 (largest) .. num_rungs-1 (smallest)."""
+
+    eps: float
+    m: float  # max singleton value
+    K: int
+
+    @property
+    def ilo(self) -> int:
+        return math.ceil(math.log(self.m) / math.log1p(self.eps) - 1e-9)
+
+    @property
+    def ihi(self) -> int:
+        return math.floor(math.log(self.K * self.m) / math.log1p(self.eps) + 1e-9)
+
+    @property
+    def num_rungs(self) -> int:
+        return max(self.ihi - self.ilo + 1, 1)
+
+    def value(self, j):
+        """Threshold at rung j (clamped), largest first. Works on tracers."""
+        jc = jnp.clip(j, 0, self.num_rungs - 1)
+        return jnp.power(1.0 + self.eps, (self.ihi - jc).astype(jnp.float32))
+
+    def values(self) -> jnp.ndarray:
+        """All rungs, descending — materialized (SieveStreaming & co)."""
+        i = jnp.arange(self.num_rungs, dtype=jnp.float32)
+        return jnp.power(1.0 + self.eps, self.ihi - i)

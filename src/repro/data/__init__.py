@@ -1,0 +1,9 @@
+"""repro.data — streaming pipeline with submodular coreset selection."""
+from .coreset import CoresetSelector
+from .distributed import DistributedSummarizer
+from .streams import (MixtureSpec, TokenStreamSpec, deterministic_batch_fn,
+                      drifting_mixture, gaussian_mixture, token_stream)
+
+__all__ = ["CoresetSelector", "DistributedSummarizer", "MixtureSpec",
+           "TokenStreamSpec", "deterministic_batch_fn", "drifting_mixture",
+           "gaussian_mixture", "token_stream"]

@@ -1,0 +1,117 @@
+"""Distributed streaming summarization: per-shard local sieves + periodic
+hierarchical merge.
+
+The paper remarks that ThreeSieves instances can run in parallel; at
+production scale the stream is data-parallel (each DP shard sees 1/P of the
+items), so we run one local ThreeSieves per shard inside ``shard_map`` and
+periodically merge:
+
+    merge: all_gather the P local summaries (P*K candidate items, tiny —
+    K vectors each) then re-run a sieve pass over the gathered candidates
+    to select the global K.  Submodularity makes this sound: greedy-style
+    re-selection over the union of per-shard summaries is the standard
+    two-round (tree-reduce) protocol for distributed submodular cover
+    (Mirzasoleiman et al., RandGreeDi lineage) — each local summary is a
+    (1-eps)(1-1/e) summary of its shard w.h.p., and the merge pass loses at
+    most another constant factor.
+
+Communication cost: P*K*d floats per merge — for P=32 shards, K=100, d=256
+that is 3.2 MB, once every ``merge_every`` chunks.  Compare against
+centralizing the raw stream: chunk*P*d floats *per chunk*.
+
+All-device execution: the local phase is embarrassingly parallel (vmap'd
+state under shard_map over the 'data' axis of the mesh) and jits to one
+SPMD program; the merge is one all_gather + a scan — no host round trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.functions import LogDet
+from repro.core.threesieves import ThreeSieves, TSState
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedSummarizer:
+    """P parallel ThreeSieves over the 'data' axis of ``mesh`` + merge."""
+
+    algo: ThreeSieves
+    mesh: Mesh
+    axis: str = "data"
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    # ----------------------------------------------------------------- local
+    def init(self) -> TSState:
+        """Stacked per-shard states, sharded over the data axis."""
+        P_ = self.n_shards
+        one = self.algo.init()
+        stacked = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (P_,) + l.shape), one)
+        spec = P(self.axis)
+        return jax.device_put(
+            stacked, NamedSharding(self.mesh, spec))
+
+    def update(self, states: TSState, X: Array) -> TSState:
+        """X (P*B, d) global batch, sharded over 'data'.  Each shard's local
+        sieve consumes its (B, d) slice — one SPMD program, no host sync."""
+        other = tuple(a for a in self.mesh.axis_names if a != self.axis)
+
+        def local(st, x):
+            st = jax.tree_util.tree_map(lambda l: l[0], st)
+            out = self.algo.run_batched(st, x)
+            return jax.tree_util.tree_map(lambda l: l[None], out)
+
+        fn = shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(self.axis), P(self.axis)),
+            out_specs=P(self.axis), check_vma=False)
+        return fn(states, X)
+
+    # ----------------------------------------------------------------- merge
+    def merge(self, states: TSState) -> TSState:
+        """Gather all local summaries and re-sieve into one global summary.
+
+        Returns a fresh global TSState (replicated) whose summary is the
+        merged selection.  Uses a *greedy threshold-free* pass over the
+        pooled candidates ordered by local fval (best shard first): each
+        candidate is accepted iff its marginal gain is at least the
+        SieveStreaming acceptance for the best local fval — equivalent to
+        one ThreeSieves pass with T=inf over a finite pool.
+        """
+        f = self.algo.f
+        feats_all = states.ld.feats.reshape(-1, f.d)  # (P*K, d)
+        n_all = states.ld.n  # (P,)
+        K = f.K
+        live = (jnp.arange(K)[None, :] < n_all[:, None]).reshape(-1)
+
+        def round_(carry, _):
+            ld, used = carry
+            gains = f.gains(ld, feats_all)  # one fused (K,K)x(K,PK) pass
+            gains = jnp.where(live & ~used, gains, -jnp.inf)
+            i = jnp.argmax(gains)
+            take = (gains[i] > 0) & (ld.n < K)
+            ld = f.maybe_append(ld, feats_all[i], take)
+            used = used.at[i].set(True)
+            return (ld, used), None
+
+        (ld, _), _ = jax.lax.scan(
+            round_, (f.init(), jnp.zeros((feats_all.shape[0],), bool)),
+            None, length=K)
+        z = jnp.zeros((), jnp.int32)
+        return TSState(ld=ld, j=z, t=z, n_fused=z)
+
+    def global_summary(self, states: TSState) -> Tuple[Array, Array, Array]:
+        merged = self.merge(states)
+        return merged.ld.feats, merged.ld.n, merged.ld.fval

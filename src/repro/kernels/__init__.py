@@ -1,0 +1,10 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jit'd public wrapper with padding + backend routing) and
+<name>/ref.py (pure-jnp oracle used by tests and the CPU path).
+"""
+from .flash_attention import attention_ref, flash_attention
+from .rbf_gain import rbf_gain, rbf_gain_ref
+
+__all__ = ["flash_attention", "attention_ref", "rbf_gain", "rbf_gain_ref"]

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: blocked flash attention (causal / full), GQA-aware.
+
+The framework's dominant compute hot-spot.  Online-softmax formulation:
+one pass over KV blocks per Q block, running (max, sum, acc) carried in VMEM
+scratch — HBM traffic is O(S * d) instead of O(S^2).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks); the kv axis is the
+innermost (sequential) dimension.  GQA is handled in the BlockSpec index
+maps: q head h reads kv head h // group_size, so no materialized
+repeat_kv — the KV block is fetched once per group from HBM.
+
+Causal blocks strictly above the diagonal are skipped with ``pl.when``
+(compute and HBM fetch for those blocks is elided by the block predicate).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  kv_len: int, num_kv_blocks: int):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    # causal: block (i, j) contributes iff some kj <= some qi
+    live = True
+    if causal:
+        live = j * block_k <= i * block_q + block_q - 1
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]  # (Bq, dh)
+        k = k_ref[0, 0]  # (Bk, dh)
+        v = v_ref[0, 0]  # (Bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (Bq, Bk)
+
+        qi = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kj = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kj < kv_len
+        if causal:
+            mask &= qi >= kj
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_sc[:, :1]  # (Bq, 1)
+        l_prev = l_sc[:, :1]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = jnp.broadcast_to(m_cur, m_sc.shape)
+        l_sc[...] = jnp.broadcast_to(l_cur, l_sc.shape)
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _finalize():
+        l = l_sc[:, :1]
+        o_ref[0, 0] = (acc_sc[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "block_q", "block_k", "kv_len", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None, block_q: int = 128,
+                           block_k: int = 128, kv_len: int | None = None,
+                           interpret: bool = False):
+    """q (B, Hq, Sq, dh), k/v (B, Hkv, Sk, dh) -> (B, Hq, Sq, dh).
+
+    Sq % block_q == 0 and Sk % block_k == 0 required (ops.py pads);
+    ``kv_len`` masks KV padding (defaults to Sk).
+    """
+    B, Hq, Sq, dh = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = scale if scale is not None else dh**-0.5
+    kv_len = kv_len if kv_len is not None else Sk
+    nq, nk = Sq // block_q, Sk // block_k
+    grid = (B, Hq, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, kv_len=kv_len, num_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            # running max / sum / accumulator, lane-replicated for TPU layout
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""jit'd public wrapper for flash attention: pad seq dims to block multiples,
+route to Pallas (TPU / interpret) or the jnp oracle."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "use_pallas", "interpret", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = False,
+                    interpret: bool = False, block_q: int = 128,
+                    block_k: int = 128):
+    """Public attention entry. q (B,Hq,Sq,dh), k/v (B,Hkv,Sk,dh)."""
+    if not (use_pallas or interpret):
+        return attention_ref(q, k, v, causal=causal)
+
+    B, Hq, Sq, dh = q.shape
+    Sk = k.shape[2]
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, block_q=bq,
+                                 block_k=bk, kv_len=Sk, interpret=interpret)
+    return out[:, :, :Sq, :]

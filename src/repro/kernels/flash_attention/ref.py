@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (also the CPU/dry-run path is the
+chunked variant in repro.models.attention, which this oracle validates)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None,
+                  kv_len: int | None = None):
+    """q (B, Hq, Sq, dh), k/v (B, Hkv, Sk, dh) -> (B, Hq, Sq, dh).
+
+    fp32 softmax, materialized (Sq, Sk) scores — the O(S^2) memory oracle.
+    """
+    B, Hq, Sq, dh = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else dh**-0.5
+    kv_len = kv_len if kv_len is not None else Sk
+
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    kj = jnp.arange(Sk)[None, None, None, :]
+    mask = kj < kv_len
+    if causal:
+        qi = jnp.arange(Sq)[None, None, :, None]
+        mask = mask & (qi >= kj)
+    s = jnp.where(mask, s, -1e30)
+    p = _softmax(s)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _softmax(s):
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    return p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)

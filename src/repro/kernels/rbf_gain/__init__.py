@@ -1,0 +1,4 @@
+from .ops import rbf_gain
+from .ref import rbf_gain_ref
+
+__all__ = ["rbf_gain", "rbf_gain_ref"]

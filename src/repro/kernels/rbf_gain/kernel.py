@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused ThreeSieves marginal-gain evaluation.
+
+The single hot compute of the paper — for a candidate batch X (B, d) against
+the current summary (feats (K, d), Linv (K, K), live-row mask):
+
+    d2   = |x|^2 - 2 x feats^T + |feats|^2          (Bt, K)   squared dists
+    Km   = a * exp(-d2 / (2 l^2)) * mask            (Bt, K)   kernel block
+    C    = Km @ Linv^T                              (Bt, K)   whitened row
+    gain = 1/2 * log((1+a) - |C|^2)                 (Bt,)
+
+Everything after the (Bt,d)x(d,K) distance matmul stays in VMEM — one HBM
+read of X per candidate, one scalar write.  The MXU sees two matmuls
+(x@feats^T and Km@Linv^T); K and d are padded to lane multiples (128) by the
+ops.py wrapper so both matmuls are hardware-aligned.
+
+Grid: (B / BLOCK_B,) over candidates.  The summary operands (feats, Linv,
+mask — at most K=1024 rows) are small enough to live fully in VMEM and are
+re-fetched per block via a constant index_map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _gain_kernel(x_ref, feats_ref, linv_ref, mask_ref, out_ref, *,
+                 a: float, inv2l2: float):
+    x = x_ref[...]  # (Bt, d)
+    feats = feats_ref[...]  # (K, d)
+    linv = linv_ref[...]  # (K, K)
+    mask = mask_ref[...]  # (1, K)
+
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)  # (Bt, 1)
+    fn = jnp.sum(feats * feats, axis=-1)[None, :]  # (1, K)
+    xw = jnp.dot(x, feats.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(xn + fn - 2.0 * xw, 0.0)
+    km = a * jnp.exp(-inv2l2 * d2) * mask  # (Bt, K)
+    c = jnp.dot(km, linv.T, preferred_element_type=jnp.float32)  # MXU
+    cn2 = jnp.sum(c * c, axis=-1, keepdims=True)  # (Bt, 1)
+    out_ref[...] = 0.5 * jnp.log(jnp.maximum((1.0 + a) - cn2, 1e-12))
+
+
+@functools.partial(jax.jit, static_argnames=("a", "inv2l2", "block_b",
+                                             "interpret"))
+def rbf_gain_pallas(x, feats, linv, mask, *, a: float, inv2l2: float,
+                    block_b: int = DEFAULT_BLOCK_B, interpret: bool = False):
+    """x (B, d), feats (K, d), linv (K, K), mask (1, K) -> gains (B, 1).
+
+    B, K, d must already be padded (B % block_b == 0; K, d % 128 == 0 for
+    MXU alignment) — ``ops.rbf_gain`` does that.
+    """
+    B, d = x.shape
+    K = feats.shape[0]
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+
+    return pl.pallas_call(
+        functools.partial(_gain_kernel, a=a, inv2l2=inv2l2),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),  # X: stream blocks
+            pl.BlockSpec((K, d), lambda i: (0, 0)),  # summary: resident
+            pl.BlockSpec((K, K), lambda i: (0, 0)),  # Linv:   resident
+            pl.BlockSpec((1, K), lambda i: (0, 0)),  # mask:   resident
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(x, feats, linv, mask)

@@ -1,0 +1,50 @@
+"""jit'd public wrapper: pad to hardware-aligned shapes, dispatch to the
+Pallas kernel on TPU (or interpret mode), else the jnp reference."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_B, rbf_gain_pallas
+from .ref import rbf_gain_ref
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("a", "inv2l2", "use_pallas",
+                                             "interpret", "block_b"))
+def rbf_gain(x, feats, linv, n, *, a: float, inv2l2: float,
+             use_pallas: bool = False, interpret: bool = False,
+             block_b: int = DEFAULT_BLOCK_B):
+    """Marginal gains of candidates ``x`` (B, d) against a summary.
+
+    feats (K, d), linv (K, K), n () int32 live rows -> (B,) float32.
+    Public entry used by the data pipeline; selects Pallas vs reference.
+    """
+    B = x.shape[0]
+    K = feats.shape[0]
+    mask = (jnp.arange(K) < n).astype(jnp.float32)[None, :]  # (1, K)
+
+    if not (use_pallas or interpret):
+        return rbf_gain_ref(x, feats, linv, mask, a=a, inv2l2=inv2l2)[:, 0]
+
+    # hardware alignment: lanes = 128, candidate blocks = block_b
+    bb = min(block_b, max(128, 1))
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 128, 1), bb, 0)
+    featsp = _pad_to(_pad_to(feats.astype(jnp.float32), 128, 1), 128, 0)
+    Kp = featsp.shape[0]
+    linvp = jnp.zeros((Kp, Kp), jnp.float32).at[:K, :K].set(
+        linv.astype(jnp.float32))
+    maskp = _pad_to(mask, 128, 1)
+    out = rbf_gain_pallas(xp, featsp, linvp, maskp, a=a, inv2l2=inv2l2,
+                          block_b=bb, interpret=interpret)
+    return out[:B, 0]

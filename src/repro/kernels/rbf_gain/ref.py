@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused gain kernel (and the CPU execution path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_gain_ref(x, feats, linv, mask, *, a: float, inv2l2: float):
+    """x (B, d), feats (K, d), linv (K, K), mask (1, K) -> (B, 1) gains."""
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)
+    fn = jnp.sum(feats * feats, axis=-1)[None, :]
+    d2 = jnp.maximum(xn + fn - 2.0 * (x @ feats.T), 0.0)
+    km = a * jnp.exp(-inv2l2 * d2) * mask
+    c = km @ linv.T
+    cn2 = jnp.sum(c * c, axis=-1, keepdims=True)
+    return 0.5 * jnp.log(jnp.maximum((1.0 + a) - cn2, 1e-12))

@@ -1,0 +1,4 @@
+from .ops import ssd_chunks
+from .ref import ssd_chunk_ref
+
+__all__ = ["ssd_chunks", "ssd_chunk_ref"]

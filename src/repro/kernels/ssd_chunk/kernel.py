@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: SSD intra-chunk dual form (Mamba2 hot-spot).
+
+One grid cell = one (batch, head, chunk) tile, entirely in VMEM:
+
+    S = (C B^T) * exp(segsum(Adt))   — the (q, q) attention-like matrix
+    Y = S X                          — MXU matmul
+    state = (B * decay)^T X          — chunk end-state (n, p)
+
+Tiling: q (chunk length, typically 256) and p/n (64-128) are already
+MXU-friendly; the (q, q) score tile and the (q, p) output tile live in
+VMEM (256*256*4 + 256*128*4 < 0.4 MB — far under the ~16 MB budget), so a
+single-block formulation per grid cell is the right shape: the kernel is
+compute-bound on the two matmuls, and HBM traffic is exactly one read of
+X/B/C/Adt and one write of Y/state per tile (the jnp reference
+materializes L and S in HBM).
+
+The inter-chunk recurrence (cross-chunk state propagation) stays in JAX —
+it is O(c) tiny einsums on (h, p, n) states, bandwidth-trivial and already
+well-partitioned; only the quadratic-in-chunk part benefits from fusion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(x_ref, adt_ref, b_ref, c_ref, y_ref, st_ref):
+    X = x_ref[0, 0].astype(jnp.float32)  # (q, p)
+    A = adt_ref[0, 0].astype(jnp.float32)  # (q,)
+    B = b_ref[0, 0].astype(jnp.float32)  # (q, n)
+    C = c_ref[0, 0].astype(jnp.float32)  # (q, n)
+    q = X.shape[0]
+
+    acum = jnp.cumsum(A)  # (q,)
+    diff = acum[:, None] - acum[None, :]  # (q, q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    S = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * L
+    Y = jax.lax.dot_general(S, X, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    decay = jnp.exp(acum[-1] - acum)  # (q,)
+    Bd = B * decay[:, None]  # (q, n)
+    state = jax.lax.dot_general(Bd, X, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (n, p)
+
+    y_ref[0, 0] = Y.astype(y_ref.dtype)
+    st_ref[0, 0] = state
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(X, Adt, B, C, *, interpret: bool = False):
+    """X (b, h, c, q, p), Adt (b, h, c, q), B/C (b, h, c, q, n)
+    -> Y (b, h, c, q, p) bf16/fp32, states (b, h, c, n, p) fp32.
+
+    Grid (b*h, c); each cell owns one full chunk tile in VMEM.
+    """
+    b, h, c, q, p = X.shape
+    n = B.shape[-1]
+    bh = b * h
+    Xr = X.reshape(bh, c, q, p)
+    Ar = Adt.reshape(bh, c, q)
+    Br = B.reshape(bh, c, q, n)
+    Cr = C.reshape(bh, c, q, n)
+
+    grid = (bh, c)
+    tile = lambda *s: pl.BlockSpec((1, 1) + s, lambda i, j: (i, j) + (0,) * len(s))
+    out_shapes = (
+        jax.ShapeDtypeStruct((bh, c, q, p), X.dtype),
+        jax.ShapeDtypeStruct((bh, c, n, p), jnp.float32),
+    )
+    Y, st = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[tile(q, p), tile(q), tile(q, n), tile(q, n)],
+        out_specs=(tile(q, p), tile(n, p)),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(Xr, Ar, Br, Cr)
+    return Y.reshape(b, h, c, q, p), st.reshape(b, h, c, n, p)

@@ -1,0 +1,42 @@
+"""jit'd public wrapper for the SSD intra-chunk kernel: layout adaptation
+from the model's (b, L, h, ...) tensors, Pallas on TPU (or interpret mode),
+jnp reference elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk_pallas
+from .ref import ssd_chunk_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",
+                                             "interpret"))
+def ssd_chunks(X, Adt, B, C, *, chunk: int, use_pallas: bool = False,
+               interpret: bool = False):
+    """Model-layout entry: X (b, L, h, p), Adt (b, L, h), B/C (b, L, h, n)
+    with L % chunk == 0 -> (Y_diag (b, L, h, p), states (b, c, h, p, n)).
+
+    Matches the shapes repro.models.mamba.ssd uses for its intra-chunk
+    term and end-states (states transposed to (p, n) there).
+    """
+    b, L, h, p = X.shape
+    n = B.shape[-1]
+    c = L // chunk
+    # (b, L, h, x) -> (b, h, c, q, x)
+    tf = lambda t: t.reshape(b, c, chunk, h, -1).transpose(0, 3, 1, 2, 4)
+    Xc = tf(X)
+    Bc = tf(B)
+    Cc = tf(C)
+    Ac = Adt.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)
+
+    if use_pallas:
+        Y, st = ssd_chunk_pallas(Xc, Ac, Bc, Cc, interpret=interpret)
+    else:
+        Y, st = ssd_chunk_ref(Xc, Ac, Bc, Cc)
+    # back to model layout
+    Y = Y.transpose(0, 2, 3, 1, 4).reshape(b, L, h, p)
+    states = st.transpose(0, 2, 1, 4, 3)  # (b, c, h, p, n)
+    return Y, states

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel.
+
+One chunk of the state-space-duality dual form (Dao & Gu 2024):
+
+    Acum  = cumsum(Adt)                                (q,)
+    L     = tril(exp(Acum_i - Acum_j))                 (q, q)
+    Y     = ((C @ B^T) * L) @ X                        (q, p)
+    state = (B * exp(Acum_q - Acum))^T @ X             (n, p)
+
+Inputs per (batch, head, chunk): X (q, p) dt-scaled inputs, Adt (q,) decay
+logits, B/C (q, n) input/output projections.  fp32 accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(X, Adt, B, C):
+    """X (..., q, p), Adt (..., q), B/C (..., q, n) -> (Y, state)."""
+    Xf = X.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    A = Adt.astype(jnp.float32)
+    acum = jnp.cumsum(A, -1)  # (..., q)
+    diff = acum[..., :, None] - acum[..., None, :]  # (..., q, q)
+    q = X.shape[-2]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    S = jnp.einsum("...qn,...sn->...qs", Cf, Bf) * L
+    Y = jnp.einsum("...qs,...sp->...qp", S, Xf)
+    decay = jnp.exp(acum[..., -1:] - acum)  # (..., q)
+    state = jnp.einsum("...qn,...q,...qp->...np", Bf, decay, Xf)
+    return Y.astype(X.dtype), state.astype(jnp.float32)

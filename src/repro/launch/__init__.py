@@ -1,0 +1,9 @@
+"""repro.launch — meshes, sharding rules, dry-run and drivers.
+
+NOTE: dryrun is intentionally NOT imported here — importing it sets
+XLA_FLAGS for 512 placeholder devices and must only happen in the
+dedicated entrypoint process.
+"""
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

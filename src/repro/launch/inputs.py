@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input-shape) cell.
+
+``input_specs(cfg, shape)`` returns a dict of ShapeDtypeStructs — weak-type
+correct, shardable, and *never* allocated (the dry-run lowers against them;
+KV caches are derived with ``jax.eval_shape`` so even a 500k-token cache
+costs zero bytes here).
+
+Shape table (assigned to this paper):
+  train_4k     seq=4096    global_batch=256   -> train_step
+  prefill_32k  seq=32768   global_batch=32    -> prefill (serve)
+  decode_32k   seq=32768   global_batch=128   -> serve_step (1 new token)
+  long_500k    seq=524288  global_batch=1     -> serve_step; sub-quadratic
+                                                 archs only (SSM / hybrid)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model, ModelConfig, init_cache
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (DESIGN.md §6)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped per spec"
+    return True, ""
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _frontend_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    """Stub modality frontends: precomputed frame/patch embeddings."""
+    out: Dict[str, Any] = {}
+    if cfg.encoder is not None:
+        out["frames"] = _sds((batch, cfg.encoder.n_frames, cfg.d_model),
+                             cfg.dtype)
+    if cfg.n_prefix:
+        out["prefix"] = _sds((batch, cfg.n_prefix, cfg.d_model), cfg.dtype)
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, seq: int, batch: int) -> Dict[str, Any]:
+    specs = {
+        "tokens": _sds((batch, seq), jnp.int32),
+        "labels": _sds((batch, seq), jnp.int32),
+    }
+    specs.update(_frontend_specs(cfg, batch))
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, seq: int, batch: int
+                        ) -> Dict[str, Any]:
+    specs = {"tokens": _sds((batch, seq), jnp.int32)}
+    specs.update(_frontend_specs(cfg, batch))
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """Abstract KV/SSM cache tree — zero allocation via eval_shape."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_seq, jnp.dtype(cfg.dtype)))
+
+
+def decode_input_specs(cfg: ModelConfig, seq: int, batch: int
+                       ) -> Dict[str, Any]:
+    """One new token with a cache holding ``seq`` prior positions."""
+    specs: Dict[str, Any] = {
+        "token": _sds((batch, 1), jnp.int32),
+        "caches": cache_specs(cfg, batch, seq),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.encoder is not None:
+        specs["enc_out"] = _sds((batch, cfg.encoder.n_frames, cfg.d_model),
+                                cfg.dtype)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Tuple[str, Dict[str, Any]]:
+    """-> (kind, {name: ShapeDtypeStruct | pytree of them})."""
+    if shape not in SHAPES:
+        raise ValueError(f"unknown shape {shape!r}; choose from {list(SHAPES)}")
+    s = SHAPES[shape]
+    seq, batch, kind = s["seq"], s["batch"], s["kind"]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape}: {why}")
+    if kind == "train":
+        return kind, train_input_specs(cfg, seq, batch)
+    if kind == "prefill":
+        return kind, prefill_input_specs(cfg, seq, batch)
+    return kind, decode_input_specs(cfg, seq, batch)

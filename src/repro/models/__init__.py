@@ -1,0 +1,8 @@
+"""repro.models — composable transformer/SSM stack covering all assigned
+architecture families."""
+from .config import (EncoderConfig, MLAConfig, MoEConfig, ModelConfig,
+                     SSMConfig)
+from .transformer import Model, init_cache, model_spec
+
+__all__ = ["EncoderConfig", "MLAConfig", "MoEConfig", "ModelConfig",
+           "SSMConfig", "Model", "init_cache", "model_spec"]

@@ -1,0 +1,329 @@
+"""Attention layers: GQA (dense archs), MLA (DeepSeek-V2), cross-attention
+(enc-dec).  Three entry modes per layer:
+
+  * train    — full-sequence causal, chunked-softmax (flash-equivalent memory)
+  * prefill  — train math + returns the populated KV cache
+  * decode   — single new token against the cache (serve_step)
+
+The pure-JAX chunked implementation is the CPU / dry-run path; on real TPU
+``cfg.use_pallas_attention`` routes to the Pallas flash kernel
+(repro.kernels.flash_attention), which is validated against the same oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MLAConfig, ModelConfig
+from .layers import ParamDef, apply_norm, apply_rope, norm_spec, shard_act
+
+Array = jax.Array
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash-equivalent chunked attention (pure JAX)
+# ---------------------------------------------------------------------------
+
+
+def _attend_block(q, k, v, qpos, kv_len, causal):
+    """q (B,Sq,Kv,G,hd) fp32-softmax attention against full k/v (B,T,Kv,hd).
+
+    qpos (Sq,) global query positions; keys masked to t < kv_len (+causal).
+    """
+    B, Sq, Kv, G, hd = q.shape
+    T = k.shape[1]
+    scale = hd**-0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    t = jnp.arange(T)
+    mask = (t[None, :] < kv_len)
+    if causal:
+        mask = mask & (qpos[:, None] >= t[None, :])
+    s = jnp.where(mask[None, None, None], s, NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.astype(v.dtype)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      chunk: int = 512, kv_len=None, q_offset=0) -> Array:
+    """q (B,S,H,hd), k/v (B,T,Kv,hd) -> (B,S,H,hd).
+
+    Scans over query chunks so peak memory is O(chunk * T) scores instead of
+    O(S * T) — the flash-attention memory profile, in pure JAX.
+    """
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # may differ from hd (MLA: qk 192 vs v 128)
+    G = H // Kv
+    kv_len = T if kv_len is None else kv_len
+    qg = q.reshape(B, S, Kv, G, hd)
+
+    if S <= chunk:
+        qpos = q_offset + jnp.arange(S)
+        o = _attend_block(qg, k, v, qpos, kv_len, causal)
+        return o.reshape(B, S, H, dv)
+
+    pad = (-S) % chunk
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    nc = qg.shape[1] // chunk
+
+    def one(i):
+        qc = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, 1)
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        return _attend_block(qc, k, v, qpos, kv_len, causal)
+
+    o = jax.lax.map(one, jnp.arange(nc))  # (nc, B, chunk, Kv, G, dv)
+    o = jnp.moveaxis(o, 0, 1).reshape(B, nc * chunk, Kv, G, dv)
+    return o[:, :S].reshape(B, S, H, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d, hd, Hq, Kv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    s = {
+        "wq": ParamDef((d, Hq, hd), ("fsdp", "heads", None)),
+        "wk": ParamDef((d, Kv, hd), ("fsdp", "kv_heads", None)),
+        "wv": ParamDef((d, Kv, hd), ("fsdp", "kv_heads", None)),
+        "wo": ParamDef((Hq, hd, d), ("heads", None, "fsdp")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((Hq, hd), ("heads", None), "zeros")
+        s["bk"] = ParamDef((Kv, hd), ("kv_heads", None), "zeros")
+        s["bv"] = ParamDef((Kv, hd), ("kv_heads", None), "zeros")
+    return s
+
+
+def _gqa_qkv(p, x: Array, pos, cfg: ModelConfig):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.rope != "none":
+        frac = cfg.rope_frac if cfg.rope == "partial" else 1.0
+        q = apply_rope(q, pos, frac=frac, theta=cfg.rope_theta)
+        k = apply_rope(k, pos, frac=frac, theta=cfg.rope_theta)
+    # re-anchor sharding: RoPE's split/concat chain + indivisible head
+    # counts can make GSPMD fall back to full replication (§Perf).
+    # shard_act resolves 'tp' to None when a dim does not divide, so each
+    # tensor independently gets the best available layout:
+    if not _q_heads_divisible(cfg) and cfg.attn_seq_shard and q.shape[1] > 1:
+        # context parallelism (beyond-paper §Perf): when the q-head count
+        # does not divide the model axis, shard the *query sequence* over
+        # 'model' instead — scores/softmax row-blocks stay local, k/v (small
+        # under GQA) are gathered, quadratic compute drops by the TP degree
+        # instead of being fully replicated on every model rank.
+        q = shard_act(q, "batch", "tp")
+        k = shard_act(k, "batch")
+        v = shard_act(v, "batch")
+    else:
+        q = shard_act(q, "batch", None, "tp")  # heads when divisible
+        k = shard_act(k, "batch", None, "tp")
+        v = shard_act(v, "batch", None, "tp")
+    return q, k, v
+
+
+def _q_heads_divisible(cfg: ModelConfig) -> bool:
+    from .layers import _ambient_mesh
+
+    m = _ambient_mesh()
+    if m is None or "model" not in m.axis_names:
+        return True
+    return cfg.n_heads % m.shape["model"] == 0
+
+
+def gqa_train(p, x: Array, cfg: ModelConfig, *, causal: bool = True) -> Array:
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :]
+    q, k, v = _gqa_qkv(p, x, pos, cfg)
+    if cfg.use_pallas_attention:
+        from repro.kernels import flash_attention
+
+        o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal,
+                            use_pallas=True).transpose(0, 2, 1, 3)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    Kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_seq, Kv, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, Kv, hd), dtype),
+    }
+
+
+def gqa_prefill(p, x: Array, cache, cfg: ModelConfig):
+    """Full-sequence pass that also writes the cache (positions [0, S))."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :]
+    q, k, v = _gqa_qkv(p, x, pos, cfg)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
+    }
+    o = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), cache
+
+
+def gqa_decode(p, x: Array, cache, pos: Array, cfg: ModelConfig):
+    """x (B,1,D), pos () int32 — one token against the cache."""
+    q, k, v = _gqa_qkv(p, x, pos.reshape(1, 1), cfg)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, 1),
+    }
+    o = chunked_attention(q, cache["k"], cache["v"], causal=False,
+                          chunk=cfg.attn_chunk, kv_len=pos + 1)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": ParamDef((d, H, qk_hd), ("fsdp", "heads", None)),
+        "w_dkv": ParamDef((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                          ("fsdp", None)),
+        "ckv_norm": norm_spec(m.kv_lora_rank, "rmsnorm"),
+        "w_uk": ParamDef((m.kv_lora_rank, H, m.qk_nope_head_dim),
+                         (None, "heads", None)),
+        "w_uv": ParamDef((m.kv_lora_rank, H, m.v_head_dim),
+                         (None, "heads", None)),
+        "wo": ParamDef((H, m.v_head_dim, d), ("heads", None, "fsdp")),
+    }
+
+
+def _mla_q_ckv(p, x, pos, cfg: ModelConfig):
+    m, dt = cfg.mla, x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], pos,
+                        theta=cfg.rope_theta)
+    dkv = x @ p["w_dkv"].astype(dt)  # (B,S,lora+rope)
+    ckv = apply_norm(p["ckv_norm"], dkv[..., : m.kv_lora_rank], "rmsnorm")
+    k_rope = apply_rope(dkv[..., None, m.kv_lora_rank:], pos,
+                        theta=cfg.rope_theta)[:, :, 0]  # shared head
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_train(p, x: Array, cfg: ModelConfig) -> Array:
+    """Decompressed (materialized K/V) path — train/prefill math."""
+    m, dt = cfg.mla, x.dtype
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :]
+    q_nope, q_rope, ckv, k_rope = _mla_q_ckv(p, x, pos, cfg)
+    k_nope = jnp.einsum("bsl,lhn->bshn", ckv, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsl,lhn->bshn", ckv, p["w_uv"].astype(dt))
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope_h], -1)
+    o = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(dt))
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill(p, x: Array, cache, cfg: ModelConfig):
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None, :]
+    _, _, ckv, k_rope = _mla_q_ckv(p, x, pos, cfg)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, 1),
+        "krope": jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), 0, 1),
+    }
+    return mla_train(p, x, cfg), cache
+
+
+def mla_decode(p, x: Array, cache, pos: Array, cfg: ModelConfig):
+    """Absorbed-matmul decode: attention runs in the compressed latent space
+    — the cache stays (B, S, lora+rope) and W_uk/W_uv are folded into the
+    query/output projections (DeepSeek-V2 §2.1.2)."""
+    m, dt = cfg.mla, x.dtype
+    q_nope, q_rope, ckv, k_rope = _mla_q_ckv(p, x, pos.reshape(1, 1), cfg)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, 1),
+        "krope": jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), pos, 1),
+    }
+    # absorb W_uk into the query
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"].astype(dt))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bshl,btl->bhst", q_lat.astype(jnp.float32),
+                    cache["ckv"].astype(jnp.float32))
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                      cache["krope"].astype(jnp.float32))) * scale
+    t = jnp.arange(cache["ckv"].shape[1])
+    s = jnp.where((t <= pos)[None, None, None, :], s, NEG)
+    pmax = jnp.max(s, -1, keepdims=True)
+    w = jnp.exp(s - pmax)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-30)
+    ctx = jnp.einsum("bhst,btl->bshl", w, cache["ckv"].astype(jnp.float32))
+    v_ctx = jnp.einsum("bshl,lhv->bshv", ctx.astype(dt), p["w_uv"].astype(dt))
+    return jnp.einsum("bshv,hvd->bsd", v_ctx, p["wo"].astype(dt)), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d, hd, Hq = cfg.d_model, cfg.hd, cfg.n_heads
+    return {
+        "wq": ParamDef((d, Hq, hd), ("fsdp", "heads", None)),
+        "wk": ParamDef((d, Hq, hd), ("fsdp", "heads", None)),
+        "wv": ParamDef((d, Hq, hd), ("fsdp", "heads", None)),
+        "wo": ParamDef((Hq, hd, d), ("heads", None, "fsdp")),
+    }
+
+
+def cross_attend(p, x: Array, enc_kv: Tuple[Array, Array],
+                 cfg: ModelConfig) -> Array:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k, v = enc_kv
+    o = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+
+
+def cross_encode(p, enc_out: Array, cfg: ModelConfig):
+    """Precompute encoder-side K/V once (prefill)."""
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    return k, v

@@ -1,0 +1,233 @@
+"""One composable ModelConfig covering every assigned architecture family:
+dense / GQA / MLA / MoE / SSM (Mamba2 SSD) / hybrid / enc-dec / stub-frontend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0  # shared (always-on) experts, DeepSeek style
+    expert_ff: int = 0  # per-expert FFN width (0 -> use d_ff)
+    aux_loss_weight: float = 0.01
+    # "dense"  : all experts on all tokens, mask-combined (baseline; exact)
+    # "dispatch": capacity-based sort dispatch w/ EP all-to-all (optimized)
+    impl: str = "dense"
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD."""
+
+    d_state: int = 128
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_width: int = 4
+    expand: int = 2
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Frozen-shape encoder for enc-dec (Whisper): the modality frontend is a
+    STUB — input_specs() provides precomputed frame embeddings."""
+
+    n_layers: int
+    n_frames: int  # source length (e.g. 1500 for Whisper 30s)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # families / options
+    ffn: str = "swiglu"  # "swiglu" | "gelu"
+    norm: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    qkv_bias: bool = False
+    rope: str = "standard"  # "standard" | "partial" | "none"
+    rope_frac: float = 1.0  # fraction of head_dim rotated ("partial": 0.5)
+    rope_theta: float = 10_000.0
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # per-layer kind pattern, cycled over layers: "A"=attention, "M"=mamba
+    layer_pattern: str = "A"
+    # per-layer ffn pattern, cycled: "D"=dense FFN, "E"=MoE FFN, "-"=none
+    # (mamba layers in Jamba carry their own FFN per pattern)
+    ffn_pattern: str = "D"
+    # leading layers forced to dense FFN and unrolled outside the layer scan
+    # (DeepSeek-V2: first layer is dense)
+    first_k_dense: int = 0
+    encoder: Optional[EncoderConfig] = None  # enc-dec if set
+    n_prefix: int = 0  # stub modality prefix tokens (VLM patches)
+    tie_embeddings: bool = False
+    max_seq: int = 131_072
+
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"  # master params (train)
+    remat: bool = True
+    # "full"  — recompute everything in backward (min memory, max recompute)
+    # "dots"  — save matmul/einsum outputs, recompute elementwise only
+    #           (jax.checkpoint_policies.checkpoint_dots): near-zero extra
+    #           flops, still frees the big attention/FFN intermediates
+    remat_policy: str = "full"
+    scan_layers: bool = True
+    # how many consecutive layers form one scanned superblock (Jamba: 8)
+    block_size: int = 1
+    attn_chunk: int = 512  # q-chunk for the pure-JAX flash equivalent
+    use_pallas_attention: bool = False  # TPU path; CPU/dry-run uses chunked
+    # context parallelism for head counts that do not divide the model axis:
+    # shard the query sequence over 'model' (beyond-paper §Perf optimization)
+    attn_seq_shard: bool = False
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    def layer_kind(self, i: int) -> str:
+        return self.layer_pattern[i % len(self.layer_pattern)]
+
+    def ffn_kind(self, i: int) -> str:
+        if i < self.first_k_dense:
+            return "D"
+        j = i - self.first_k_dense
+        return self.ffn_pattern[j % len(self.ffn_pattern)]
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_hybrid(self) -> bool:
+        return "M" in self.layer_pattern and "A" in self.layer_pattern
+
+    @property
+    def is_ssm_only(self) -> bool:
+        return set(self.layer_pattern) == {"M"}
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: attention-free or mostly-SSM hybrid."""
+        return "M" in self.layer_pattern
+
+    @property
+    def n_blocks(self) -> int:
+        rest = self.n_layers - self.first_k_dense
+        assert rest % self.block_size == 0, (self.name,)
+        return rest // self.block_size
+
+    # ------------------------------------------------------- parameter counts
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        total = self.vocab * self.d_model  # embed
+        if not self.tie_embeddings:
+            total += self.vocab * self.d_model  # lm head
+        for i in range(self.n_layers):
+            total += self._layer_params(i)
+        total += self.d_model  # final norm
+        if self.encoder is not None:
+            for _ in range(self.encoder.n_layers):
+                total += self._attn_params() + self._ffn_params("D") \
+                    + 2 * self.d_model
+            total += self.d_model
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed-active experts)."""
+        total = self.vocab * self.d_model
+        if not self.tie_embeddings:
+            total += self.vocab * self.d_model
+        for i in range(self.n_layers):
+            total += self._layer_params(i, active_only=True)
+        total += self.d_model
+        return total
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.hd
+        if self.mla is not None:
+            m = self.mla
+            qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+            p = d * self.n_heads * qk_hd  # q proj
+            p += d * (m.kv_lora_rank + m.qk_rope_head_dim)  # kv down
+            p += m.kv_lora_rank * self.n_heads * (
+                m.qk_nope_head_dim + m.v_head_dim)  # kv up
+            p += self.n_heads * m.v_head_dim * d  # out
+            return p
+        p = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+        p += self.n_heads * hd * d
+        if self.qkv_bias:
+            p += (self.n_heads + 2 * self.n_kv_heads) * hd
+        return p
+
+    def _mamba_params(self) -> int:
+        s = self.ssm
+        d = self.d_model
+        di = s.d_inner(d)
+        nh = s.n_heads(d)
+        conv_ch = di + 2 * s.n_groups * s.d_state
+        p = d * (2 * di + 2 * s.n_groups * s.d_state + nh)  # in_proj
+        p += conv_ch * s.conv_width  # depthwise conv
+        p += nh * 2  # A_log, D
+        p += nh  # dt bias
+        p += di  # gated norm
+        p += di * d  # out_proj
+        return p
+
+    def _ffn_params(self, kind: str, active_only: bool = False) -> int:
+        d = self.d_model
+        if kind == "-":
+            return 0
+        if kind == "E":
+            m = self.moe
+            eff = m.expert_ff or self.d_ff
+            per = (3 if self.ffn == "swiglu" else 2) * d * eff
+            n_routed = m.top_k if active_only else m.n_experts
+            router = d * m.n_experts
+            return per * (n_routed + m.n_shared) + router
+        mult = 3 if self.ffn == "swiglu" else 2
+        return mult * d * self.d_ff
+
+    def _layer_params(self, i: int, active_only: bool = False) -> int:
+        kind = self.layer_kind(i)
+        p = 2 * self.d_model  # norms
+        if kind == "M":
+            p += self._mamba_params()
+        else:
+            p += self._attn_params()
+            if self.encoder is not None:  # decoder cross-attention
+                p += self._attn_params() + self.d_model
+        p += self._ffn_params(self.ffn_kind(i), active_only)
+        return p

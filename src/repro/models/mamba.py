@@ -1,0 +1,267 @@
+"""Mamba2 (state-space duality / SSD) layer — chunked parallel scan for
+train/prefill, O(1)-state recurrence for decode.
+
+The chunked SSD algorithm (Dao & Gu 2024, Listing 1): within a chunk the
+recurrence is expanded into an attention-like quadratic form (MXU friendly);
+across chunks a cumulative-decay recurrence propagates the (H, P, N) state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ParamDef, shard_act
+
+Array = jax.Array
+
+
+def mamba_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    conv_ch = di + 2 * gn
+    return {
+        "w_zx": ParamDef((d, 2 * di), ("fsdp", "ffn")),
+        "w_bc": ParamDef((d, 2 * gn), ("fsdp", None)),
+        "w_dt": ParamDef((d, nh), ("fsdp", None)),
+        "conv_w": ParamDef((s.conv_width, conv_ch), (None, None)),
+        "conv_b": ParamDef((conv_ch,), (None,), "zeros"),
+        "A_log": ParamDef((nh,), (None,), "zeros"),  # A = -exp(A_log) = -1
+        "D": ParamDef((nh,), (None,), "ones"),
+        "dt_bias": ParamDef((nh,), (None,), "zeros"),
+        "norm_scale": ParamDef((di,), (None,), "ones"),
+        "w_out": ParamDef((di, d), ("ffn", "fsdp")),
+    }
+
+
+# ---------------------------------------------------------------- SSD core
+
+
+def _segsum(x: Array) -> Array:
+    """x (..., Q) -> (..., Q, Q) lower-tri cumulative segment sums."""
+    cs = jnp.cumsum(x, -1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    Q = x.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd(X: Array, Adt: Array, B: Array, C: Array, chunk: int,
+        init_state: Optional[Array] = None,
+        use_pallas: bool = False, interpret: bool = False
+        ) -> Tuple[Array, Array]:
+    """Chunked SSD.
+
+    X (b,L,h,p)  inputs (already dt-scaled), Adt (b,L,h) = dt*A,
+    B,C (b,L,h,n).  L % chunk == 0.  Returns (Y (b,L,h,p), final (b,h,p,n)).
+
+    ``use_pallas`` routes the quadratic intra-chunk term + end-states
+    through the fused VMEM kernel (repro.kernels.ssd_chunk); the O(c)
+    inter-chunk recurrence below stays in JAX either way.
+    """
+    b, L, h, p = X.shape
+    n = B.shape[-1]
+    c = L // chunk
+    Xc = X.reshape(b, c, chunk, h, p)
+    Bc = B.reshape(b, c, chunk, h, n)
+    Cc = C.reshape(b, c, chunk, h, n)
+    Ac = Adt.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,q)
+    A_cum = jnp.cumsum(Ac, -1)
+
+    if use_pallas:
+        from repro.kernels.ssd_chunk import ssd_chunks
+
+        Yk, states_k = ssd_chunks(X, Adt, B, C, chunk=chunk,
+                                  use_pallas=True, interpret=interpret)
+        Y_diag = Yk.reshape(b, c, chunk, h, p)
+        states = states_k.transpose(0, 1, 2, 3, 4)  # (b,c,h,p,n)
+    else:
+        # intra-chunk (quadratic, attention-like)
+        Lmat = jnp.exp(_segsum(Ac))  # (b,h,c,q,s)
+        Y_diag = jnp.einsum("bcqhn,bcshn,bhcqs,bcshp->bcqhp",
+                            Cc, Bc, Lmat, Xc)
+
+        # chunk end-states
+        decay_states = jnp.exp(A_cum[..., -1:] - A_cum)  # (b,h,c,q)
+        states = jnp.einsum("bcqhn,bhcq,bcqhp->bchpn", Bc, decay_states, Xc)
+
+    # inter-chunk recurrence over chunk sums
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), X.dtype)
+    states_ext = jnp.concatenate([init_state[:, None], states], 1)
+    chunk_sum = jnp.pad(A_cum[..., -1], ((0, 0), (0, 0), (1, 0)))  # (b,h,c+1)
+    decay_chunk = jnp.exp(_segsum(chunk_sum))  # (b,h,c+1,c+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states_ext)
+    prev_states, final = new_states[:, :-1], new_states[:, -1]
+
+    state_decay = jnp.exp(A_cum)  # (b,h,c,q)
+    Y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Cc, prev_states, state_decay)
+    Y = (Y_diag + Y_off).reshape(b, L, h, p)
+    return Y, final
+
+
+def ssd_reference(X, Adt, B, C, init_state=None):
+    """Naive per-step recurrence — oracle for tests."""
+    b, L, h, p = X.shape
+    n = B.shape[-1]
+    state = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+    ys = []
+    for t in range(L):
+        da = jnp.exp(Adt[:, t]).astype(jnp.float32)  # (b,h)
+        state = state * da[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", X[:, t].astype(jnp.float32),
+            B[:, t].astype(jnp.float32))
+        ys.append(jnp.einsum("bhn,bhpn->bhp", C[:, t].astype(jnp.float32),
+                             state))
+    return jnp.stack(ys, 1).astype(X.dtype), state.astype(X.dtype)
+
+
+# ------------------------------------------------------------ full layer
+
+
+def _conv_causal(u: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, width cw: u (B,S,C), w (cw,C)."""
+    cw = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(up[:, i : i + u.shape[1]] * w[i] for i in range(cw))
+    return out + b
+
+
+def _project(p, x: Array, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    gn = s.n_groups * s.d_state
+    dt_ = x.dtype
+    zx = shard_act(x @ p["w_zx"].astype(dt_), "batch", None, "tp")
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = x @ p["w_bc"].astype(dt_)
+    dt_raw = x @ p["w_dt"].astype(dt_)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    return z, xin, bc, dt
+
+
+def _split_heads(xc, bcc, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    B_, C_ = bcc[..., :gn], bcc[..., gn:]
+    shp = xc.shape[:-1]
+    xh = xc.reshape(*shp, nh, s.head_dim)
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(B_.reshape(*shp, s.n_groups, s.d_state), rep, axis=-2)
+    Ch = jnp.repeat(C_.reshape(*shp, s.n_groups, s.d_state), rep, axis=-2)
+    return xh, Bh, Ch
+
+
+def _gate_out(p, y_flat: Array, z: Array, x_dtype) -> Array:
+    yf = y_flat.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]
+    gated = (yn * jax.nn.silu(z.astype(jnp.float32))).astype(x_dtype)
+    return gated @ p["w_out"].astype(x_dtype)
+
+
+def mamba_train(p, x: Array, cfg: ModelConfig) -> Array:
+    """x (B,S,D) -> (B,S,D)."""
+    s = cfg.ssm
+    B_, S, d = x.shape
+    di = s.d_inner(d)
+    z, xin, bc, dt = _project(p, x, cfg)
+    u = jnp.concatenate([xin, bc], -1)
+    conv = jax.nn.silu(_conv_causal(u, p["conv_w"].astype(x.dtype),
+                                    p["conv_b"].astype(x.dtype))
+                       .astype(jnp.float32)).astype(x.dtype)
+    xc, bcc = conv[..., :di], conv[..., di:]
+    xh, Bh, Ch = _split_heads(xc, bcc, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,)
+    Adt = dt * A  # (B,S,nh)
+    Xs = xh * dt[..., None].astype(x.dtype)
+    pad = (-S) % s.chunk
+    if pad:
+        Xs = jnp.pad(Xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Adt = jnp.pad(Adt, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Y, _ = ssd(Xs, Adt.astype(Xs.dtype), Bh, Ch, s.chunk)
+    Y = Y[:, :S]
+    Y = Y + p["D"].astype(x.dtype)[:, None] * xh
+    return _gate_out(p, Y.reshape(B_, S, di), z, x.dtype)
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba_prefill(p, x: Array, cache, cfg: ModelConfig):
+    """Train math + return the recurrent state at the end of the sequence."""
+    s = cfg.ssm
+    B_, S, d = x.shape
+    di = s.d_inner(d)
+    z, xin, bc, dt = _project(p, x, cfg)
+    u = jnp.concatenate([xin, bc], -1)
+    conv_full = _conv_causal(u, p["conv_w"].astype(x.dtype),
+                             p["conv_b"].astype(x.dtype))
+    conv = jax.nn.silu(conv_full.astype(jnp.float32)).astype(x.dtype)
+    xc, bcc = conv[..., :di], conv[..., di:]
+    xh, Bh, Ch = _split_heads(xc, bcc, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Adt = dt * A
+    Xs = xh * dt[..., None].astype(x.dtype)
+    pad = (-S) % s.chunk
+    if pad:
+        Xs = jnp.pad(Xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Adt = jnp.pad(Adt, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Y, final = ssd(Xs, Adt.astype(Xs.dtype), Bh, Ch, s.chunk)
+    Y = Y[:, :S] + p["D"].astype(x.dtype)[:, None] * xh
+    out = _gate_out(p, Y.reshape(B_, S, di), z, x.dtype)
+    cache = {
+        "conv": u[:, S - (s.conv_width - 1):, :].astype(cache["conv"].dtype),
+        "ssm": final.astype(jnp.float32),
+    }
+    return out, cache
+
+
+def mamba_decode(p, x: Array, cache, cfg: ModelConfig):
+    """x (B,1,D) one-step recurrence."""
+    s = cfg.ssm
+    B_, _, d = x.shape
+    di = s.d_inner(d)
+    z, xin, bc, dt = _project(p, x, cfg)  # seq dim = 1
+    u = jnp.concatenate([xin, bc], -1)  # (B,1,ch)
+    window = jnp.concatenate([cache["conv"], u], 1)  # (B,cw,ch)
+    w = p["conv_w"].astype(x.dtype)
+    conv = sum(window[:, i] * w[i] for i in range(s.conv_width)) \
+        + p["conv_b"].astype(x.dtype)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)  # (B,ch)
+    xc, bcc = conv[..., :di], conv[..., di:]
+    xh, Bh, Ch = _split_heads(xc, bcc, cfg)  # (B,nh,p), (B,nh,n)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]  # (B,nh)
+    da = jnp.exp(dt1 * A)  # (B,nh)
+    ssm = cache["ssm"] * da[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", (xh * dt1[..., None]).astype(jnp.float32),
+        Bh.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), ssm)
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype)[:, None] * xh
+    out = _gate_out(p, y.reshape(B_, 1, di), z, x.dtype)
+    return out, {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                 "ssm": ssm}

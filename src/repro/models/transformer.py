@@ -1,0 +1,413 @@
+"""Unified model assembly: decoder-only LMs (dense / MoE / SSM / hybrid),
+enc-dec (Whisper), and stub-frontend VLM — one Model class per ModelConfig.
+
+Layer stacking: layers are grouped into homogeneous *superblocks* of
+``cfg.block_size`` consecutive layers (Jamba: 8) and scanned with
+``jax.lax.scan`` over stacked parameters so the HLO stays compact for
+64-72-layer models; ``cfg.first_k_dense`` leading layers (DeepSeek) are
+unrolled separately.  ``jax.checkpoint`` wraps the scanned body when
+``cfg.remat`` is set.
+
+Entry points:
+  * ``train_logits``/``loss``         — training forward
+  * ``prefill``                       — populate caches for a prompt
+  * ``decode_step``                   — serve_step: one token, all caches
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import layers
+from . import mamba as mb
+from .config import ModelConfig
+from .layers import (ParamDef, abstract_tree, apply_mlp, apply_norm,
+                     embed_lookup, embed_spec, init_tree, mlp_spec, norm_spec,
+                     stack_spec)
+from .moe import apply_moe, moe_spec
+
+Array = jax.Array
+
+
+def _remat(body, cfg: ModelConfig):
+    """jax.checkpoint with the configured policy ('full' or 'dots')."""
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(body)
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _layer_spec(cfg: ModelConfig, i: int, *, decoder_cross: bool) -> Dict:
+    kind = cfg.layer_kind(i)
+    s: Dict[str, Any] = {"ln1": norm_spec(cfg.d_model, cfg.norm)}
+    if kind == "M":
+        s["mamba"] = mb.mamba_spec(cfg)
+    elif cfg.mla is not None:
+        s["attn"] = attn.mla_spec(cfg)
+    else:
+        s["attn"] = attn.gqa_spec(cfg)
+    if decoder_cross and kind == "A":
+        s["cross_ln"] = norm_spec(cfg.d_model, cfg.norm)
+        s["cross"] = attn.cross_spec(cfg)
+    fk = cfg.ffn_kind(i)
+    if fk != "-":
+        s["ln2"] = norm_spec(cfg.d_model, cfg.norm)
+        s["ffn"] = moe_spec(cfg) if fk == "E" else mlp_spec(
+            cfg.d_model, cfg.d_ff, cfg.ffn)
+    return s
+
+
+def _enc_layer_spec(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": norm_spec(cfg.d_model, cfg.norm),
+        "attn": attn.gqa_spec(dataclasses.replace(cfg, mla=None)),
+        "ln2": norm_spec(cfg.d_model, cfg.norm),
+        "ffn": mlp_spec(cfg.d_model, cfg.d_ff, cfg.ffn),
+    }
+
+
+def model_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    spec: Dict[str, Any] = {
+        "embed": embed_spec(cfg.vocab, d),
+        "final_norm": norm_spec(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamDef((d, cfg.vocab), ("fsdp", "vocab"),
+                                   "normal:0.02")
+    if cfg.n_prefix:
+        spec["prefix_proj"] = ParamDef((d, d), ("fsdp", None))
+    cross = cfg.encoder is not None
+    if cfg.first_k_dense:
+        spec["head_layers"] = {
+            f"h{i}": _layer_spec(cfg, i, decoder_cross=cross)
+            for i in range(cfg.first_k_dense)
+        }
+    # one superblock of block_size consecutive layers, stacked n_blocks times
+    block = {
+        f"l{j}": _layer_spec(cfg, cfg.first_k_dense + j, decoder_cross=cross)
+        for j in range(cfg.block_size)
+    }
+    spec["blocks"] = stack_spec(block, cfg.n_blocks)
+    if cross:
+        enc = {
+            "blocks": stack_spec(_enc_layer_spec(cfg), cfg.encoder.n_layers),
+            "final_norm": norm_spec(d, cfg.norm),
+        }
+        spec["encoder"] = enc
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ModelConfig, i: int, batch: int, max_seq: int, dtype):
+    kind = cfg.layer_kind(i)
+    if kind == "M":
+        return mb.mamba_init_cache(cfg, batch, dtype)
+    if cfg.mla is not None:
+        return attn.mla_init_cache(cfg, batch, max_seq, dtype)
+    return attn.gqa_init_cache(cfg, batch, max_seq, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """{'head': per-layer caches, 'blocks': {l<j>: stacked (n_blocks,)}}."""
+    dtype = dtype or cfg.activation_dtype
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_blocks,) + l.shape), tree)
+
+    out = {"blocks": {
+        f"l{j}": stack(_layer_cache(cfg, cfg.first_k_dense + j, batch,
+                                    max_seq, dtype))
+        for j in range(cfg.block_size)
+    }}
+    if cfg.first_k_dense:
+        out["head"] = {
+            f"h{i}": _layer_cache(cfg, i, batch, max_seq, dtype)
+            for i in range(cfg.first_k_dense)
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(p, x: Array, cfg: ModelConfig, i: int, *,
+                 mode: str, cache=None, pos=None, enc_out=None):
+    """One sublayer in mode 'train' | 'prefill' | 'decode'.
+
+    Returns (x, aux, new_cache).
+    """
+    kind = cfg.layer_kind(i)
+    aux = jnp.zeros((), jnp.float32)
+    x = layers.shard_act(x, "batch")  # re-anchor at every layer boundary
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    new_cache = cache
+    if kind == "M":
+        if mode == "train":
+            h = mb.mamba_train(p["mamba"], h, cfg)
+        elif mode == "prefill":
+            h, new_cache = mb.mamba_prefill(p["mamba"], h, cache, cfg)
+        else:
+            h, new_cache = mb.mamba_decode(p["mamba"], h, cache, cfg)
+    elif cfg.mla is not None:
+        if mode == "train":
+            h = attn.mla_train(p["attn"], h, cfg)
+        elif mode == "prefill":
+            h, new_cache = attn.mla_prefill(p["attn"], h, cache, cfg)
+        else:
+            h, new_cache = attn.mla_decode(p["attn"], h, cache, pos, cfg)
+    else:
+        if mode == "train":
+            h = attn.gqa_train(p["attn"], h, cfg)
+        elif mode == "prefill":
+            h, new_cache = attn.gqa_prefill(p["attn"], h, cache, cfg)
+        else:
+            h, new_cache = attn.gqa_decode(p["attn"], h, cache, pos, cfg)
+    x = x + h
+
+    if "cross" in p and enc_out is not None:
+        h = apply_norm(p["cross_ln"], x, cfg.norm)
+        enc_kv = attn.cross_encode(p["cross"], enc_out, cfg)
+        x = x + attn.cross_attend(p["cross"], h, enc_kv, cfg)
+
+    fk = cfg.ffn_kind(i)
+    if fk != "-":
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        if fk == "E":
+            h, aux = apply_moe(p["ffn"], h, cfg)
+        else:
+            h = apply_mlp(p["ffn"], h, cfg.ffn)
+        x = x + h
+    return x, aux, new_cache
+
+
+def _apply_block(bp, x, cfg: ModelConfig, *, mode, caches=None, pos=None,
+                 enc_out=None):
+    """One superblock (block_size sublayers), as used inside the scan."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+    for j in range(cfg.block_size):
+        c = caches[f"l{j}"] if caches is not None else None
+        x, aux, nc = _apply_layer(bp[f"l{j}"], x, cfg, cfg.first_k_dense + j,
+                                  mode=mode, cache=c, pos=pos, enc_out=enc_out)
+        aux_total = aux_total + aux
+        if new_caches is not None:
+            new_caches[f"l{j}"] = nc
+    return x, aux_total, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ setup
+    def spec(self):
+        return model_spec(self.cfg)
+
+    def init(self, key) -> Dict[str, Any]:
+        return init_tree(self.spec(), key)
+
+    def abstract_params(self):
+        return abstract_tree(self.spec())
+
+    # ---------------------------------------------------------------- encoder
+    def _encode(self, params, frames: Array) -> Array:
+        """Whisper encoder over precomputed frame embeddings (stub frontend),
+        with sinusoidal positions, non-causal attention."""
+        cfg = self.cfg
+        S = frames.shape[1]
+        pos = jnp.arange(S)
+        half = cfg.d_model // 2
+        freqs = jnp.exp(-jnp.arange(half) / half * jnp.log(10_000.0))
+        ang = pos[:, None] * freqs[None, :]
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+        x = frames.astype(cfg.activation_dtype) + pe.astype(
+            cfg.activation_dtype)
+
+        def body(x, bp):
+            h = apply_norm(bp["ln1"], x, cfg.norm)
+            h = attn.gqa_train(bp["attn"],
+                               h, dataclasses.replace(cfg, mla=None, rope="none"),
+                               causal=False)
+            x = x + h
+            h = apply_norm(bp["ln2"], x, cfg.norm)
+            x = x + apply_mlp(bp["ffn"], h, cfg.ffn)
+            return x, None
+
+        f = _remat(body, cfg)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(f, x, params["encoder"]["blocks"])
+        else:
+            for i in range(cfg.encoder.n_layers):
+                bp = jax.tree_util.tree_map(lambda l: l[i],
+                                            params["encoder"]["blocks"])
+                x, _ = f(x, bp)
+        return apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
+
+    # ------------------------------------------------------------------ embed
+    def _embed_inputs(self, params, tokens: Array, prefix: Optional[Array]):
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens, cfg.activation_dtype)
+        if cfg.n_prefix:
+            assert prefix is not None, "stub-frontend model needs prefix embeds"
+            pfx = prefix.astype(cfg.activation_dtype) @ params[
+                "prefix_proj"].astype(cfg.activation_dtype)
+            x = jnp.concatenate([pfx, x], 1)
+        return x
+
+    def _head(self, params, x: Array) -> Array:
+        cfg = self.cfg
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        if cfg.tie_embeddings:
+            w = params["embed"].astype(cfg.activation_dtype).T
+        else:
+            w = params["lm_head"].astype(cfg.activation_dtype)
+        return layers.shard_act(x @ w, "batch", None, "tp")
+
+    # ------------------------------------------------------------------ train
+    def train_logits(self, params, batch: Dict[str, Array]):
+        """batch: tokens (B,S) [+ prefix (B,P,D) | frames (B,F,D)].
+
+        Returns (logits (B, S?, V), aux_loss).
+        """
+        cfg = self.cfg
+        enc_out = None
+        if cfg.encoder is not None:
+            enc_out = self._encode(params, batch["frames"])
+        x = self._embed_inputs(params, batch["tokens"], batch.get("prefix"))
+
+        aux0 = jnp.zeros((), jnp.float32)
+        for i in range(cfg.first_k_dense):
+            x, a, _ = _apply_layer(params["head_layers"][f"h{i}"], x, cfg, i,
+                                   mode="train", enc_out=enc_out)
+            aux0 = aux0 + a
+
+        def body(carry, bp):
+            x, aux = carry
+            x, a, _ = _apply_block(bp, x, cfg, mode="train", enc_out=enc_out)
+            return (x, aux + a), None
+
+        f = _remat(body, cfg)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(f, (x, aux0), params["blocks"])
+        else:
+            aux = aux0
+            for i in range(cfg.n_blocks):
+                bp = jax.tree_util.tree_map(lambda l: l[i], params["blocks"])
+                (x, aux), _ = f((x, aux), bp)
+        logits = self._head(params, x)
+        if cfg.n_prefix:
+            logits = logits[:, cfg.n_prefix:]
+        return logits, aux
+
+    def loss(self, params, batch: Dict[str, Array]):
+        """Next-token CE (+ MoE aux). labels default to shifted tokens."""
+        cfg = self.cfg
+        logits, aux = self.train_logits(params, batch)
+        tokens = batch["tokens"]
+        labels = batch.get("labels")
+        if labels is None:
+            labels, logits_l = tokens[:, 1:], logits[:, :-1]
+        else:
+            logits_l = logits
+        logp = jax.nn.log_softmax(logits_l.astype(jnp.float32), -1)
+        ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+        ce = -jnp.mean(ll)
+        w = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+        return ce + w * aux, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------ serve
+    def _scan_blocks(self, body, x, xs):
+        """scan when cfg.scan_layers else an unrolled loop (re-stacking the
+        per-block outputs) — unrolled lowering keeps XLA cost analysis
+        honest (§Roofline) since while-loop bodies are counted once."""
+        if self.cfg.scan_layers:
+            return jax.lax.scan(body, x, xs)
+        outs = []
+        for i in range(self.cfg.n_blocks):
+            xi = jax.tree_util.tree_map(lambda l: l[i], xs)
+            x, out = body(x, xi)
+            outs.append(out)
+        stacked = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *outs)
+        return x, stacked
+
+    def prefill(self, params, batch: Dict[str, Array], caches):
+        """Populate caches for prompt tokens; returns (last_logits, caches)."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.encoder is not None:
+            enc_out = self._encode(params, batch["frames"])
+        x = self._embed_inputs(params, batch["tokens"], batch.get("prefix"))
+
+        new_head = {}
+        for i in range(cfg.first_k_dense):
+            x, _, nc = _apply_layer(params["head_layers"][f"h{i}"], x, cfg, i,
+                                    mode="prefill", cache=caches["head"][f"h{i}"],
+                                    enc_out=enc_out)
+            new_head[f"h{i}"] = nc
+
+        def body(x, blk):
+            bp, bc = blk
+            x, _, nc = _apply_block(bp, x, cfg, mode="prefill", caches=bc,
+                                    enc_out=enc_out)
+            return x, nc
+
+        x, new_blocks = self._scan_blocks(
+            body, x, (params["blocks"], caches["blocks"]))
+        new_caches = {"blocks": new_blocks}
+        if cfg.first_k_dense:
+            new_caches["head"] = new_head
+        logits = self._head(params, x[:, -1:])
+        return logits[:, 0], new_caches, enc_out
+
+    def decode_step(self, params, token: Array, caches, pos: Array,
+                    enc_out=None):
+        """token (B, 1) int32, pos () int32 -> (logits (B, V), caches)."""
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], token, cfg.activation_dtype)
+
+        new_head = {}
+        for i in range(cfg.first_k_dense):
+            x, _, nc = _apply_layer(params["head_layers"][f"h{i}"], x, cfg, i,
+                                    mode="decode", cache=caches["head"][f"h{i}"],
+                                    pos=pos, enc_out=enc_out)
+            new_head[f"h{i}"] = nc
+
+        def body(x, blk):
+            bp, bc = blk
+            x, _, nc = _apply_block(bp, x, cfg, mode="decode", caches=bc,
+                                    pos=pos, enc_out=enc_out)
+            return x, nc
+
+        x, new_blocks = self._scan_blocks(
+            body, x, (params["blocks"], caches["blocks"]))
+        new_caches = {"blocks": new_blocks}
+        if cfg.first_k_dense:
+            new_caches["head"] = new_head
+        logits = self._head(params, x)
+        return logits[:, 0], new_caches

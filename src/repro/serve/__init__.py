@@ -1,0 +1,4 @@
+"""repro.serve — batched prefill/decode serving."""
+from .engine import ServeDriver, make_decode_step, make_prefill_step
+
+__all__ = ["ServeDriver", "make_decode_step", "make_prefill_step"]

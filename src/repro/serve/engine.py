@@ -1,0 +1,83 @@
+"""Batched serving: prefill + decode step factories and a request driver.
+
+The KV cache is contiguous and fixed-shape (B, max_seq, ...) — sequence-
+sharded over the 'model' mesh axis for decode (flash-decode style: GSPMD
+derives the per-shard partial softmax + (max, sum) psum from the einsum),
+batch-sharded over data-parallel axes.  ``serve_step`` (decode) is the
+function lowered by the dry-run for ``decode_*`` / ``long_*`` shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model, ModelConfig, init_cache
+
+Array = jax.Array
+
+
+def make_prefill_step(model: Model):
+    """(params, batch{tokens[, frames, prefix]}, caches)
+    -> (last_logits (B, V), caches, enc_out|None)."""
+
+    def prefill_step(params, batch, caches):
+        return model.prefill(params, batch, caches)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, *, sample: str = "greedy"):
+    """serve_step: one new token against a populated cache.
+
+    (params, token (B,1) int32, caches, pos () int32[, enc_out])
+    -> (next_token (B,1) int32, logits (B, V), caches)
+    """
+
+    def decode_step(params, token, caches, pos, enc_out=None):
+        logits, caches = model.decode_step(params, token, caches, pos,
+                                           enc_out=enc_out)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        else:
+            raise ValueError(sample)
+        return nxt, logits, caches
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class ServeDriver:
+    """Minimal batched request driver: admit up to B prompts, prefill once,
+    decode until every slot hits its stop length.  Single-host execution
+    path (examples / tests); the jitted steps are the same ones the dry-run
+    lowers for the production mesh."""
+
+    model: Model
+    max_seq: int
+    batch: int
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.model))
+        self._decode = jax.jit(make_decode_step(self.model))
+
+    def generate(self, params, prompts: Array, n_new: int,
+                 frontend: Optional[Dict[str, Array]] = None) -> Array:
+        """prompts (B, P) int32 -> (B, P + n_new) int32 (greedy)."""
+        cfg = self.model.cfg
+        B, P = prompts.shape
+        assert B == self.batch
+        caches = init_cache(cfg, B, self.max_seq)
+        batch = {"tokens": prompts, **(frontend or {})}
+        logits, caches, enc_out = self._prefill(params, batch, caches)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out = [prompts, tok]
+        # account for the stub prefix tokens occupying cache slots
+        pos0 = P + (cfg.n_prefix or 0)
+        for i in range(n_new - 1):
+            tok, _, caches = self._decode(params, tok, caches,
+                                          jnp.int32(pos0 + i), enc_out)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

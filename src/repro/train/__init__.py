@@ -1,0 +1,6 @@
+"""repro.train — optimizer, train-step factory, fault-tolerant loop."""
+from .optim import AdamWConfig, OptState, adamw_update, init_opt_state
+from .step import TrainStepConfig, make_train_step
+
+__all__ = ["AdamWConfig", "OptState", "adamw_update", "init_opt_state",
+           "TrainStepConfig", "make_train_step"]

@@ -1,0 +1,111 @@
+"""train_step factory: loss -> grads -> AdamW, with optional microbatched
+gradient accumulation (``lax.scan`` over microbatches so peak activation
+memory is one microbatch) and optional int8 error-feedback gradient
+compression on the cross-pod ('pod') reduction.
+
+The returned step is a pure function
+    (params, opt_state, batch[, ef_state]) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with explicit in/out shardings (see launch/dryrun.py
+and launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from .optim import AdamWConfig, OptState, adamw_update
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    num_microbatches: int = 1
+    grad_dtype: str = "float32"  # accumulation dtype across microbatches
+
+
+def _split_micro(batch: Dict[str, Array], n: int) -> Dict[str, Array]:
+    """(B, ...) -> (n, B//n, ...) for every leaf."""
+
+    def one(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_grad_fn(model: Model, cfg: TrainStepConfig):
+    """Returns grad_fn(params, batch) -> (grads, metrics)."""
+    loss_fn = make_loss_fn(model)
+    vgrad = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if cfg.num_microbatches <= 1:
+        def grad_fn(params, batch):
+            (loss, metrics), grads = vgrad(params, batch)
+            metrics = dict(metrics, loss=loss)
+            return grads, metrics
+
+        return grad_fn
+
+    n = cfg.num_microbatches
+    gdt = jnp.dtype(cfg.grad_dtype)
+
+    def grad_fn(params, batch):
+        micro = _split_micro(batch, n)
+
+        def body(acc, mb):
+            (loss, metrics), grads = vgrad(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(gdt), acc, grads)
+            return acc, (loss, metrics)
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, gdt), params)
+        acc, (losses, metrics) = jax.lax.scan(body, zeros, micro)
+        grads = jax.tree_util.tree_map(lambda a: a / n, acc)
+        metrics = jax.tree_util.tree_map(jnp.mean, metrics)
+        metrics = dict(metrics, loss=jnp.mean(losses))
+        return grads, metrics
+
+    return grad_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    step_cfg: TrainStepConfig = TrainStepConfig(),
+                    compressor=None):
+    """compressor: optional repro.train.compress.Compressor applied to grads
+    (error-feedback state threaded through the step)."""
+    grad_fn = make_grad_fn(model, step_cfg)
+
+    if compressor is None:
+        def train_step(params, opt_state: OptState, batch):
+            grads, metrics = grad_fn(params, batch)
+            params, opt_state, opt_metrics = adamw_update(
+                params, grads, opt_state, opt_cfg)
+            return params, opt_state, {**metrics, **opt_metrics}
+
+        return train_step
+
+    def train_step_c(params, opt_state: OptState, batch, ef_state):
+        grads, metrics = grad_fn(params, batch)
+        grads, ef_state, c_metrics = compressor.compress_reduce(
+            grads, ef_state)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        return params, opt_state, ef_state, {
+            **metrics, **opt_metrics, **c_metrics}
+
+    return train_step_c

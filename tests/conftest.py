@@ -1,0 +1,10 @@
+import os
+
+# Smoke tests and benches must see exactly ONE device (the dry-run sets up
+# its 512 placeholder devices itself, in a subprocess / separate entrypoint).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")

@@ -1,0 +1,78 @@
+"""CheckpointStore: commit semantics, restart, GC, async, resharding."""
+import json
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointStore
+
+
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2, 2), jnp.bfloat16),
+                   "c": jnp.int32(7)},
+    }
+
+
+def test_save_load_roundtrip(tmp_path):
+    store = CheckpointStore(tmp_path)
+    t = tree()
+    store.save(5, t, {"step": 5, "loss": 1.25})
+    assert store.latest_step() == 5
+    like = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    loaded, extra = store.load(5, like)
+    assert extra["loss"] == 1.25
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        t, loaded)
+
+
+def test_torn_save_is_ignored(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(1, tree())
+    # simulate a preemption mid-write: directory without COMMITTED
+    torn = tmp_path / "step_000000002"
+    torn.mkdir()
+    (torn / "MANIFEST.json").write_text("{}")
+    assert store.latest_step() == 1
+    # GC removes the torn directory on next save
+    store.save(3, tree())
+    assert not torn.exists()
+    assert store.committed_steps() == [1, 3]
+
+
+def test_gc_keeps_latest(tmp_path):
+    store = CheckpointStore(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, tree())
+    assert store.committed_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save_async(7, tree(), {"step": 7})
+    store.wait()
+    assert store.latest_step() == 7
+
+
+def test_load_with_sharding(tmp_path):
+    """Elastic restart: load onto an explicit (new-mesh) sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    store = CheckpointStore(tmp_path)
+    t = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    store.save(1, t)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    loaded, _ = store.load(1, like, shardings=sh)
+    assert loaded["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(loaded["w"]),
+                                  np.asarray(t["w"]))

@@ -1,0 +1,132 @@
+"""Unit + property tests for the incremental log-det objective."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import KernelConfig, LogDet, naive_logdet
+
+
+def _objective(K=8, d=4, a=1.0, ls=1.0):
+    return LogDet(K=K, d=d, a=a, kernel=KernelConfig("rbf", ls))
+
+
+def _naive_np(feats, ls, a):
+    """float64 numpy oracle."""
+    x = np.asarray(feats, np.float64)
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    Km = np.exp(-d2 / (2 * ls**2))
+    return 0.5 * np.linalg.slogdet(np.eye(len(x)) + a * Km)[1]
+
+
+def test_incremental_matches_naive():
+    f = _objective()
+    X = np.random.RandomState(0).randn(8, 4).astype(np.float32)
+    st_ = f.init()
+    for i in range(8):
+        st_ = f.append(st_, jnp.asarray(X[i]))
+        want = _naive_np(X[: i + 1], 1.0, 1.0)
+        np.testing.assert_allclose(float(st_.fval), want, rtol=2e-4)
+    assert int(st_.n) == 8
+
+
+def test_linv_is_inverse():
+    f = _objective()
+    X = np.random.RandomState(1).randn(5, 4).astype(np.float32)
+    st_ = f.init()
+    for i in range(5):
+        st_ = f.append(st_, jnp.asarray(X[i]))
+    eye = np.asarray(st_.L @ st_.Linv)
+    np.testing.assert_allclose(eye, np.eye(8), atol=2e-5)
+
+
+def test_gains_match_value_difference():
+    f = _objective()
+    rng = np.random.RandomState(2)
+    X = rng.randn(4, 4).astype(np.float32)
+    cands = rng.randn(16, 4).astype(np.float32)
+    st_ = f.init()
+    for x in X:
+        st_ = f.append(st_, jnp.asarray(x))
+    gains = np.asarray(f.gains(st_, jnp.asarray(cands)))
+    base = _naive_np(X, 1.0, 1.0)
+    for b in range(16):
+        want = _naive_np(np.vstack([X, cands[b : b + 1]]), 1.0, 1.0) - base
+        np.testing.assert_allclose(gains[b], want, rtol=3e-4, atol=1e-5)
+
+
+def test_gain1_equals_batched_gain():
+    f = _objective()
+    rng = np.random.RandomState(3)
+    st_ = f.init()
+    for x in rng.randn(3, 4).astype(np.float32):
+        st_ = f.append(st_, jnp.asarray(x))
+    cands = jnp.asarray(rng.randn(8, 4).astype(np.float32))
+    g_b = f.gains(st_, cands)
+    g_1 = jnp.stack([f.gain1(st_, c) for c in cands])
+    np.testing.assert_allclose(np.asarray(g_b), np.asarray(g_1), rtol=1e-6)
+
+
+def test_refactor_matches_incremental():
+    f = _objective()
+    rng = np.random.RandomState(4)
+    X = rng.randn(6, 4).astype(np.float32)
+    st_inc = f.init()
+    for x in X:
+        st_inc = f.append(st_inc, jnp.asarray(x))
+    st_ref = f.refactor(st_inc.feats, st_inc.n)
+    np.testing.assert_allclose(float(st_ref.fval), float(st_inc.fval), rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(st_ref.L), np.asarray(st_inc.L), atol=3e-4
+    )
+
+
+def test_singleton_value_analytic():
+    f = _objective(a=0.7)
+    st_ = f.init()
+    g = float(f.gain1(st_, jnp.zeros(4)))
+    np.testing.assert_allclose(g, f.singleton_value, rtol=1e-6)
+    np.testing.assert_allclose(g, 0.5 * np.log1p(0.7), rtol=1e-6)
+
+
+# ----------------------------------------------------------------- properties
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(0, 4))
+def test_monotone_and_submodular(seed, nA, extra):
+    """Delta(e|A) >= Delta(e|B) >= 0 for A ⊆ B (hypothesis sweep)."""
+    rng = np.random.RandomState(seed)
+    f = _objective(K=12, d=3, ls=1.5)
+    A = rng.randn(nA, 3).astype(np.float32)
+    B = np.vstack([A, rng.randn(extra, 3).astype(np.float32)])
+    e = jnp.asarray(rng.randn(3).astype(np.float32))
+
+    stA, stB = f.init(), f.init()
+    for x in A:
+        stA = f.append(stA, jnp.asarray(x))
+    for x in B:
+        stB = f.append(stB, jnp.asarray(x))
+    gA, gB = float(f.gain1(stA, e)), float(f.gain1(stB, e))
+    assert gB >= -1e-5  # monotone (non-negative marginal gain)
+    assert gA >= gB - 1e-4  # submodular (diminishing returns)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 10))
+def test_fval_nonneg_and_bounded(seed, n):
+    """0 <= f(S) <= |S| * m  (monotone + submodular bound the paper uses)."""
+    rng = np.random.RandomState(seed)
+    f = _objective(K=12, d=3)
+    st_ = f.init()
+    for x in rng.randn(n, 3).astype(np.float32):
+        st_ = f.append(st_, jnp.asarray(x))
+    assert float(st_.fval) >= -1e-5
+    assert float(st_.fval) <= n * f.singleton_value + 1e-4
+
+
+def test_naive_logdet_helper():
+    f = _objective()
+    X = jnp.asarray(np.random.RandomState(7).randn(5, 4), jnp.float32)
+    v = naive_logdet(X, f.kernel, f.a)
+    np.testing.assert_allclose(float(v), _naive_np(np.asarray(X), 1.0, 1.0),
+                               rtol=2e-4)

@@ -1,0 +1,118 @@
+"""repro.data: streams, coreset selector, distributed merge."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import make
+from repro.data import (CoresetSelector, DistributedSummarizer, MixtureSpec,
+                        TokenStreamSpec, drifting_mixture, gaussian_mixture,
+                        token_stream)
+
+
+def test_gaussian_mixture_shapes_and_determinism():
+    spec = MixtureSpec(n_components=4, d=8)
+    s1 = gaussian_mixture(0, spec, chunk=32)
+    s2 = gaussian_mixture(0, spec, chunk=32)
+    a, b = next(s1), next(s2)
+    assert a.shape == (32, 8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.allclose(np.asarray(next(s1)), np.asarray(a))
+
+
+def test_drifting_mixture_introduces_classes():
+    spec = MixtureSpec(n_components=4, d=4, spread=50.0, noise=0.01)
+    stream = drifting_mixture(0, spec, chunk=64, introduce_every=2)
+    first = np.asarray(next(stream))
+    # chunk 0: only component 0 active -> tiny spread
+    assert np.std(first, axis=0).max() < 1.0
+    for _ in range(7):
+        later = np.asarray(next(stream))
+    assert np.std(later, axis=0).max() > 1.0  # more components active
+
+
+def test_token_stream_batches():
+    spec = TokenStreamSpec(vocab=128, seq=16, batch=4, embed_d=8)
+    batch, emb = next(token_stream(0, spec))
+    assert batch["tokens"].shape == (4, 16)
+    assert batch["labels"].shape == (4, 16)
+    assert emb.shape == (4, 8)
+    assert int(batch["tokens"].max()) < 128
+
+
+def test_coreset_selector_fills_and_assigns():
+    spec = MixtureSpec(n_components=8, d=8, spread=6.0)
+    sel = CoresetSelector(K=8, d=8, T=50, eps=0.05)
+    stream = gaussian_mixture(0, spec, chunk=64)
+    for _ in range(30):
+        sel.update(next(stream))
+    feats, n, fval = sel.summary()
+    assert int(n) == 8
+    assert float(fval) > 0
+    assert sel.accept_rate <= 8 / (30 * 64) + 1e-9
+    idx = sel.assign(next(stream))
+    assert idx.shape == (64,)
+    assert int(idx.max()) < 8
+    sel.reset()
+    assert sel.n_selected == 0
+
+
+def test_coreset_selector_beats_random():
+    """Diversity objective: ThreeSieves summary must out-value random."""
+    spec = MixtureSpec(n_components=16, d=8, spread=6.0)
+    chunks = [next(gaussian_mixture(0, spec, chunk=128)) for _ in range(10)]
+    sel = CoresetSelector(K=16, d=8, T=200, eps=0.01)
+    for c in chunks:
+        sel.update(c)
+    _, n_ts, f_ts = sel.summary()
+
+    rnd = make("random", 16, 8)
+    st = rnd.init()
+    for c in chunks:
+        st = rnd.run(st, c)
+    _, _, f_rnd = rnd.summary(st)
+    assert float(f_ts) >= float(f_rnd)
+
+
+def test_distributed_matches_quality_of_central():
+    """P-shard local sieves + merge ~ single central sieve (same data)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    algo = make("threesieves", 8, 8, T=100, eps=0.05)
+    dist = DistributedSummarizer(algo=algo, mesh=mesh)
+    states = dist.init()
+
+    spec = MixtureSpec(n_components=8, d=8, spread=6.0)
+    stream = gaussian_mixture(0, spec, chunk=64)
+    chunks = [next(stream) for _ in range(20)]
+    for c in chunks:
+        states = dist.update(states, c)
+    feats, n, fval = dist.global_summary(states)
+    assert int(n) == 8
+
+    central = algo.init()
+    run = jax.jit(algo.run_batched)
+    for c in chunks:
+        central = run(central, c)
+    _, nc, fc = algo.summary(central)
+    # merged global summary should be in the same quality ballpark
+    assert float(fval) >= 0.8 * float(fc)
+
+
+def test_distributed_two_shards_cpu():
+    """Actual 2-way shard_map path on 1 device? Not possible — instead use
+    a (1,1) mesh for the SPMD program and check P>1 merge logic directly."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    algo = make("threesieves", 4, 4, T=20, eps=0.1)
+    dist = DistributedSummarizer(algo=algo, mesh=mesh)
+    # build two independent local states manually and merge
+    s1, s2 = algo.init(), algo.init()
+    k = jax.random.PRNGKey(0)
+    X1 = jax.random.normal(k, (64, 4))
+    X2 = jax.random.normal(jax.random.PRNGKey(1), (64, 4)) + 5.0
+    s1 = algo.run_batched(s1, X1)
+    s2 = algo.run_batched(s2, X2)
+    stacked = jax.tree_util.tree_map(
+        lambda a, b: jnp.stack([a, b]), s1, s2)
+    merged = dist.merge(stacked)
+    assert int(merged.ld.n) == 4
+    assert float(merged.ld.fval) > 0

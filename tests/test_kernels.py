@@ -1,0 +1,110 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes, plus integration against the core objective."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KernelConfig, LogDet
+from repro.kernels import attention_ref, flash_attention, rbf_gain
+from repro.kernels.rbf_gain.ref import rbf_gain_ref
+
+
+# ---------------------------------------------------------------- rbf_gain
+@pytest.mark.parametrize("B,K,d", [
+    (32, 8, 4), (256, 16, 32), (300, 100, 300), (128, 128, 128), (1, 5, 7),
+])
+def test_rbf_gain_pallas_vs_ref(B, K, d):
+    rng = np.random.RandomState(B + K + d)
+    f = LogDet(K=K, d=d, kernel=KernelConfig("rbf", 1.0), a=1.0)
+    st = f.init()
+    for x in rng.randn(min(K, 6), d).astype(np.float32):
+        st = f.append(st, jnp.asarray(x))
+    X = jnp.asarray(rng.randn(B, d).astype(np.float32))
+    inv2l2 = 1.0 / (2.0 * 1.0**2)
+
+    got = rbf_gain(X, st.feats, st.Linv, st.n, a=1.0, inv2l2=inv2l2,
+                   interpret=True)
+    want = rbf_gain(X, st.feats, st.Linv, st.n, a=1.0, inv2l2=inv2l2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_rbf_gain_matches_objective_gains():
+    """The kernel must agree with LogDet.gains (the core library path)."""
+    rng = np.random.RandomState(0)
+    f = LogDet(K=12, d=16, kernel=KernelConfig("rbf", 0.8), a=2.0)
+    st = f.init()
+    for x in rng.randn(9, 16).astype(np.float32):
+        st = f.append(st, jnp.asarray(x))
+    X = jnp.asarray(rng.randn(64, 16).astype(np.float32))
+    got = rbf_gain(X, st.feats, st.Linv, st.n, a=2.0,
+                   inv2l2=1.0 / (2 * 0.8**2), interpret=True)
+    want = f.gains(st, X)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-6)
+
+
+def test_rbf_gain_empty_summary():
+    f = LogDet(K=8, d=4, kernel=KernelConfig("rbf", 1.0), a=1.0)
+    st = f.init()
+    X = jnp.ones((16, 4))
+    got = rbf_gain(X, st.feats, st.Linv, st.n, a=1.0, inv2l2=0.5,
+                   interpret=True)
+    np.testing.assert_allclose(np.asarray(got), f.singleton_value, rtol=1e-5)
+
+
+# ---------------------------------------------------------- flash attention
+ATTN_SHAPES = [
+    # B, Hq, Hkv, Sq, Sk, dh
+    (1, 2, 2, 128, 128, 64),
+    (2, 4, 2, 256, 256, 64),   # GQA 2:1
+    (1, 8, 1, 128, 384, 128),  # MQA, rectangular
+    (2, 2, 2, 100, 100, 64),   # ragged (padding path)
+    (1, 4, 4, 64, 64, 32),     # small blocks
+]
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,dh", ATTN_SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(B, Hq, Hkv, Sq, Sk, dh, causal):
+    if causal and Sq != Sk:
+        pytest.skip("causal requires Sq == Sk in this test")
+    rng = np.random.RandomState(Sq + dh)
+    q = jnp.asarray(rng.randn(B, Hq, Sq, dh).astype(np.float32)) * 0.5
+    k = jnp.asarray(rng.randn(B, Hkv, Sk, dh).astype(np.float32)) * 0.5
+    v = jnp.asarray(rng.randn(B, Hkv, Sk, dh).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, interpret=True,
+                          block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(1, 2, 128, 64), dtype) * 0.5
+    k = jnp.asarray(rng.randn(1, 2, 128, 64), dtype) * 0.5
+    v = jnp.asarray(rng.randn(1, 2, 128, 64), dtype)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert got.dtype == dtype
+
+
+def test_flash_attention_causality():
+    """Perturbing future tokens must not change past outputs."""
+    rng = np.random.RandomState(5)
+    q = jnp.asarray(rng.randn(1, 2, 128, 64).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 2, 128, 64).astype(np.float32))
+    v = jnp.asarray(rng.randn(1, 2, 128, 64).astype(np.float32))
+    o1 = flash_attention(q, k, v, causal=True, interpret=True)
+    k2 = k.at[:, :, 100:, :].set(123.0)
+    v2 = v.at[:, :, 100:, :].set(-7.0)
+    o2 = flash_attention(q, k2, v2, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1[:, :, :100]),
+                               np.asarray(o2[:, :, :100]), atol=1e-5)

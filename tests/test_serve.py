@@ -1,0 +1,71 @@
+"""Serving: prefill/decode consistency and the batched driver, per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model, init_cache
+from repro.serve import ServeDriver
+
+FAMILIES = ["qwen2-1.5b", "deepseek-v2-lite-16b", "mamba2-370m",
+            "jamba-1.5-large-398b", "whisper-small", "phi-3-vision-4.2b"]
+
+
+def _frontend(cfg, batch):
+    out = {}
+    if cfg.encoder is not None:
+        out["frames"] = 0.01 * jnp.arange(
+            batch * cfg.encoder.n_frames * cfg.d_model,
+            dtype=jnp.float32).reshape(
+            batch, cfg.encoder.n_frames, cfg.d_model).astype(
+            cfg.activation_dtype)
+    if cfg.n_prefix:
+        out["prefix"] = 0.01 * jnp.ones(
+            (batch, cfg.n_prefix, cfg.d_model), cfg.activation_dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_matches_train_logits(arch):
+    """Teacher-forced decode must reproduce the train-mode logits."""
+    cfg = get_config(arch, reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab,
+                              jnp.int32)
+    fe = _frontend(cfg, B)
+    logits_train, _ = model.train_logits(params, {"tokens": toks, **fe})
+
+    max_seq = S + (cfg.n_prefix or 0) + 4
+    caches = init_cache(cfg, B, max_seq, jnp.float32)
+    # prefill the first S-1 tokens, then decode token S-1
+    last, caches, enc_out = model.prefill(
+        params, {"tokens": toks[:, : S - 1], **fe}, caches)
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(logits_train[:, S - 2]),
+                               rtol=2e-3, atol=2e-3)
+    pos = jnp.int32(S - 1 + (cfg.n_prefix or 0))
+    step_logits, caches = model.decode_step(
+        params, toks[:, S - 1:], caches, pos, enc_out=enc_out)
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(logits_train[:, S - 1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-370m"])
+def test_driver_generates(arch):
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    driver = ServeDriver(model=model, max_seq=32, batch=2)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab, jnp.int32)
+    out = driver.generate(params, prompts, n_new=6)
+    assert out.shape == (2, 14)
+    assert (np.asarray(out[:, :8]) == np.asarray(prompts)).all()
+    assert int(out.max()) < cfg.vocab

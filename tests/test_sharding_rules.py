@@ -1,0 +1,107 @@
+"""Sharding rules, activation constraints, and §Perf feature semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model
+from repro.models.layers import shard_act
+
+
+def test_shard_act_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    y = shard_act(x, "batch", "tp")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_shard_act_applies_in_mesh():
+    mesh = make_host_mesh()
+    with mesh:
+        y = jax.jit(lambda x: shard_act(x * 1.0, "batch", "tp"))(
+            jnp.ones((4, 8)))
+    assert y.sharding.is_fully_replicated or True  # 1x1 mesh: trivial
+    np.testing.assert_array_equal(np.asarray(y), np.ones((4, 8)))
+
+
+def test_seq_shard_attention_is_numerically_identical():
+    """attn_seq_shard changes layout only, never values."""
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32", n_layers=2)
+    cfg_ss = dataclasses.replace(cfg, attn_seq_shard=True)
+    m0, m1 = Model(cfg), Model(cfg_ss)
+    params = m0.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab,
+                              jnp.int32)
+    mesh = make_host_mesh()
+    with mesh:
+        l0, _ = jax.jit(m0.train_logits)(params, {"tokens": toks})
+        l1, _ = jax.jit(m1.train_logits)(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_remat_policy_dots_matches_full():
+    """remat policy affects recompute, not values or gradients."""
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    cfg = dataclasses.replace(cfg, dtype="float32", n_layers=2, remat=True)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab,
+                              jnp.int32)
+    batch = {"tokens": toks}
+    grads = {}
+    for pol in ("full", "dots"):
+        m = Model(dataclasses.replace(cfg, remat_policy=pol))
+        params = m.init(jax.random.PRNGKey(0))
+        g = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+        grads[pol] = g
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5),
+        grads["full"], grads["dots"])
+
+
+def test_serve_mode_replicates_small_models():
+    """decode-mode params drop FSDP when the TP shard fits the budget."""
+    mesh = make_host_mesh()
+
+    small = get_config("qwen2-1.5b")  # 1.5B bf16 / 1 = 3 GB < 8 GB
+    r = shd.build_rules(small, mesh, mode="serve")
+    assert r["fsdp"] is None
+
+    big = get_config("grok-1-314b")  # 628 GB bf16 / 1 — never fits
+    r = shd.build_rules(big, mesh, mode="serve")
+    assert r["fsdp"] == "data"
+
+    # train mode always keeps FSDP
+    r = shd.build_rules(small, mesh, mode="train")
+    assert r["fsdp"] == "data"
+
+
+def test_moe_impl_equivalence_under_host_mesh():
+    """dense einsum == dispatch (big capacity) under a mesh context too."""
+    from repro.models.moe import apply_moe, moe_spec
+    from repro.models.layers import init_tree
+    from repro.models import MoEConfig, ModelConfig
+
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=4,
+                      n_kv_heads=4, d_ff=64, vocab=64,
+                      moe=MoEConfig(n_experts=4, top_k=2, expert_ff=64,
+                                    capacity_factor=8.0),
+                      dtype="float32")
+    p = init_tree(moe_spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    mesh = make_host_mesh()
+    with mesh:
+        y_dense, _ = jax.jit(
+            lambda p, x: apply_moe(p, x, cfg))(p, x)
+        cfg_d = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl="dispatch"))
+        y_disp, _ = jax.jit(
+            lambda p, x: apply_moe(p, x, cfg_d))(p, x)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_disp),
+                               rtol=1e-4, atol=1e-5)

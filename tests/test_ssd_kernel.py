@@ -1,0 +1,65 @@
+"""SSD intra-chunk Pallas kernel: shape/dtype sweep vs the jnp oracle, and
+consistency with the full model-level ssd() (intra-chunk term + states)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_chunk import ssd_chunks
+from repro.models.mamba import ssd
+
+
+def _inputs(key, b, L, h, p, n, dtype):
+    ks = jax.random.split(key, 4)
+    X = jax.random.normal(ks[0], (b, L, h, p)).astype(dtype)
+    Adt = -jax.nn.softplus(jax.random.normal(ks[1], (b, L, h))).astype(
+        jnp.float32)
+    B = jax.random.normal(ks[2], (b, L, h, n)).astype(dtype)
+    C = jax.random.normal(ks[3], (b, L, h, n)).astype(dtype)
+    return X, Adt, B, C
+
+
+@pytest.mark.parametrize("b,L,h,p,n,chunk", [
+    (1, 16, 1, 8, 4, 16),
+    (2, 64, 3, 16, 8, 16),
+    (1, 128, 2, 32, 16, 32),
+    (2, 96, 1, 64, 128, 48),  # mamba2-370m head_dim/d_state shapes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matches_ref(b, L, h, p, n, chunk, dtype):
+    X, Adt, B, C = _inputs(jax.random.PRNGKey(0), b, L, h, p, n, dtype)
+    Adt = Adt.astype(dtype)
+    Yr, sr = ssd_chunks(X, Adt, B, C, chunk=chunk, use_pallas=False)
+    Yp, sp = ssd_chunks(X, Adt, B, C, chunk=chunk, use_pallas=True,
+                        interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(Yr, np.float32),
+                               np.asarray(Yp, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(sr), np.asarray(sp),
+                               rtol=tol, atol=tol)
+
+
+def test_kernel_consistent_with_model_ssd():
+    """Full ssd() = kernel intra-chunk + inter-chunk recurrence: the first
+    chunk of the full output must equal the kernel's first-chunk Y (no
+    prior state), and the kernel's end-states must reproduce ssd's final
+    state when propagated."""
+    b, L, h, p, n, chunk = 2, 64, 2, 16, 8, 16
+    X, Adt, B, C = _inputs(jax.random.PRNGKey(1), b, L, h, p, n, jnp.float32)
+    Y_full, final = ssd(X, Adt, B, C, chunk)
+    Yk, states = ssd_chunks(X, Adt, B, C, chunk=chunk, use_pallas=True,
+                            interpret=True)
+    # chunk 0 has no incoming state: outputs must match exactly
+    np.testing.assert_allclose(np.asarray(Y_full[:, :chunk]),
+                               np.asarray(Yk[:, :chunk]), rtol=1e-4,
+                               atol=1e-4)
+    # propagate kernel end-states across chunks -> ssd's final state
+    A_c = Adt.reshape(b, L // chunk, chunk, h).transpose(0, 3, 1, 2)
+    chunk_decay = jnp.exp(A_c.sum(-1))  # (b, h, c)
+    st = jnp.zeros((b, h, p, n))
+    for c in range(L // chunk):
+        st = st * chunk_decay[:, :, c][..., None, None] + \
+            states[:, c].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(final),
+                               rtol=1e-4, atol=1e-4)

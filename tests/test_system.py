@@ -1,0 +1,110 @@
+"""End-to-end system tests: launchers, dry-run cell construction on a tiny
+mesh, input specs coverage, config registry integrity."""
+import dataclasses
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.launch.inputs import SHAPES, cell_applicable, input_specs
+
+
+def test_all_archs_have_full_and_reduced_configs():
+    assert len(all_archs()) == 10
+    for arch in all_archs():
+        full = get_config(arch)
+        red = get_config(arch, reduced=True)
+        assert full.param_count() > red.param_count()
+        # families must match between full and reduced
+        assert (full.moe is None) == (red.moe is None)
+        assert (full.ssm is None) == (red.ssm is None)
+        assert (full.encoder is None) == (red.encoder is None)
+        assert full.layer_pattern == red.layer_pattern
+
+
+def test_assigned_param_counts_sane():
+    """Total params should be near the headline numbers."""
+    expect = {
+        "grok-1-314b": (290e9, 340e9),
+        "jamba-1.5-large-398b": (370e9, 420e9),
+        "deepseek-v2-lite-16b": (14e9, 18e9),
+        "qwen2-1.5b": (1.2e9, 1.9e9),
+        "chatglm3-6b": (5.5e9, 7e9),
+        "phi3-mini-3.8b": (3.4e9, 4.2e9),
+        "mistral-nemo-12b": (11e9, 13.5e9),
+        "mamba2-370m": (0.3e9, 0.45e9),
+        "phi-3-vision-4.2b": (3.4e9, 4.4e9),
+        "whisper-small": (0.2e9, 0.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_input_specs_cover_all_cells():
+    """40 assigned cells: every applicable cell yields abstract inputs."""
+    n_cells = n_skipped = 0
+    for arch in all_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            n_cells += 1
+            ok, why = cell_applicable(cfg, shape)
+            if not ok:
+                n_skipped += 1
+                assert shape == "long_500k" and not cfg.sub_quadratic
+                continue
+            kind, specs = input_specs(cfg, shape)
+            leaves = jax.tree_util.tree_leaves(specs)
+            assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+            if kind == "train":
+                assert specs["tokens"].shape == (
+                    SHAPES[shape]["batch"], SHAPES[shape]["seq"])
+            elif kind == "decode":
+                assert specs["token"].shape == (SHAPES[shape]["batch"], 1)
+    assert n_cells == 40
+    assert n_skipped == 8  # 8 pure full-attention archs skip long_500k
+
+
+def test_long_context_applicability():
+    runs = [a for a in all_archs()
+            if cell_applicable(get_config(a), "long_500k")[0]]
+    assert sorted(runs) == ["jamba-1.5-large-398b", "mamba2-370m"]
+
+
+def test_train_launcher_end_to_end(tmp_path):
+    """The real CLI: 6 steps of a reduced arch with checkpointing + coreset."""
+    from repro.launch.train import main
+
+    main(["--arch", "qwen2-1.5b", "--reduced", "--steps", "6",
+          "--batch", "2", "--seq", "16", "--ckpt-every", "3",
+          "--coreset-k", "4", "--ckpt-dir", str(tmp_path)])
+    from repro.ckpt import CheckpointStore
+
+    assert CheckpointStore(tmp_path).latest_step() == 6
+
+
+def test_serve_launcher_end_to_end():
+    from repro.launch.serve import main
+
+    main(["--arch", "mamba2-370m", "--reduced", "--batch", "2",
+          "--prompt-len", "4", "--new-tokens", "4"])
+
+
+def test_dryrun_importable_only_in_subprocess():
+    """dryrun.py sets XLA_FLAGS at import: it must run in its own process
+    and succeed for a small cell on the production mesh."""
+    import os
+
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-small", "--shape", "train_4k", "--mesh", "single",
+         "--out", "/tmp/dryrun_test"],
+        capture_output=True, text=True, timeout=1800,
+        env=env, cwd="/root/repo")
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "[OK ]" in r.stdout

@@ -1,0 +1,134 @@
+"""ThreeSieves semantics: Algorithm 1 verbatim (numpy ref) == scan == batched."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Ladder, make, make_objective
+
+
+# ------------------------------------------------------- numpy reference
+def threesieves_numpy(X, K, T, eps, ls, a=1.0):
+    """Algorithm 1, line by line, float64 numpy. Returns selected indices,
+    final (j, t)."""
+    m = 0.5 * math.log1p(a)
+    lad = Ladder(eps=eps, m=m, K=K)
+    nr = lad.num_rungs
+
+    def fval(idx):
+        if not idx:
+            return 0.0
+        x = X[idx].astype(np.float64)
+        d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+        Km = np.exp(-d2 / (2 * ls**2))
+        return 0.5 * np.linalg.slogdet(np.eye(len(idx)) + a * Km)[1]
+
+    S, j, t = [], 0, 0
+    f_S = 0.0
+    for i in range(len(X)):
+        if len(S) < K:
+            gain = fval(S + [i]) - f_S
+            v = (1.0 + eps) ** (lad.ihi - min(j, nr - 1))
+            thr = (v / 2.0 - f_S) / (K - len(S))
+            if gain >= thr:
+                S.append(i)
+                f_S = fval(S)
+                t = 0
+                continue
+        t += 1
+        if t >= T:
+            j = min(j + 1, nr - 1)
+            t = 0
+    return S, j, t, f_S
+
+
+def _data(seed, n=400, d=3):
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(4, d) * 2.5
+    pts = centers[rng.randint(0, 4, n)] + 0.4 * rng.randn(n, d)
+    return pts.astype(np.float32)
+
+
+@pytest.mark.parametrize("T,eps,K", [(25, 0.1, 6), (60, 0.05, 8), (10, 0.2, 5)])
+def test_matches_numpy_reference(T, eps, K):
+    X = _data(seed=K + T)
+    ts = make("threesieves", K=K, d=X.shape[1], lengthscale=1.5, eps=eps, T=T)
+    out = jax.jit(ts.run)(ts.init(), jnp.asarray(X))
+    S_ref, j_ref, t_ref, f_ref = threesieves_numpy(
+        X, K, T, eps, ls=1.5, a=1.0
+    )
+    assert int(out.ld.n) == len(S_ref)
+    np.testing.assert_allclose(
+        np.asarray(out.ld.feats[: len(S_ref)]), X[S_ref], atol=0
+    )
+    assert int(out.j) == j_ref
+    assert int(out.t) == t_ref
+    np.testing.assert_allclose(float(out.ld.fval), f_ref, rtol=3e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(5, 80),
+       st.sampled_from([0.05, 0.1, 0.2]), st.integers(50, 300))
+def test_batched_equals_scan(seed, T, eps, n_items):
+    """The TPU fast path is bit-identical to the per-item scan."""
+    X = jnp.asarray(_data(seed, n=n_items))
+    ts = make("threesieves", K=7, d=3, lengthscale=1.5, eps=eps, T=T)
+    a = jax.jit(ts.run)(ts.init(), X)
+    b = jax.jit(ts.run_batched)(ts.init(), X)
+    assert int(a.ld.n) == int(b.ld.n)
+    assert int(a.j) == int(b.j)
+    assert int(a.t) == int(b.t)
+    np.testing.assert_array_equal(np.asarray(a.ld.feats), np.asarray(b.ld.feats))
+    # fused pass count: 1 initial + 1 per accept (+1 per threshold-window no-op)
+    assert int(b.n_fused) <= int(b.ld.n) + 2 + n_items // max(T, 1)
+
+
+def test_batched_chunked_equals_scan():
+    """Feeding the stream in chunks (the pipeline case) preserves semantics."""
+    X = jnp.asarray(_data(seed=42, n=360))
+    ts = make("threesieves", K=9, d=3, lengthscale=1.5, eps=0.1, T=40)
+    whole = jax.jit(ts.run)(ts.init(), X)
+    st_ = ts.init()
+    runb = jax.jit(ts.run_batched)
+    for i in range(0, 360, 48):
+        st_ = runb(st_, X[i : i + 48])
+    assert int(whole.ld.n) == int(st_.ld.n)
+    np.testing.assert_array_equal(
+        np.asarray(whole.ld.feats), np.asarray(st_.ld.feats)
+    )
+    assert int(whole.j) == int(st_.j) and int(whole.t) == int(st_.t)
+
+
+def test_quality_vs_greedy():
+    """Paper claim: near-Greedy quality for reasonable T (no-drift stream)."""
+    X = jnp.asarray(_data(seed=7, n=4000))
+    g = make("greedy", K=10, d=3, lengthscale=1.5)
+    _, _, fg = jax.jit(g.select)(X)
+    # eps=0.05 -> ~47 rungs; T=80 -> the ladder can actually descend within
+    # the stream (the paper's regime: T large relative to acceptance rate but
+    # small relative to stream length / num rungs).
+    ts = make("threesieves", K=10, d=3, lengthscale=1.5, eps=0.05, T=80)
+    out = jax.jit(ts.run_batched)(ts.init(), X)
+    assert float(out.ld.fval) >= 0.8 * float(fg)
+
+
+def test_rule_of_three_T():
+    from repro.core.threesieves import ThreeSieves
+
+    # alpha=0.05, tau=0.003 -> T ~ 1000 (paper's example)
+    T = ThreeSieves.T_from_alpha_tau(0.05, 0.003)
+    assert 990 <= T <= 1010
+
+
+def test_ladder_properties():
+    lad = Ladder(eps=0.1, m=0.5 * math.log(2.0), K=20)
+    vs = np.asarray(lad.values())
+    assert (np.diff(vs) < 0).all()  # descending
+    assert vs[0] <= lad.K * lad.m * (1 + lad.eps) + 1e-6
+    assert vs[-1] >= lad.m / (1 + lad.eps) - 1e-6
+    # covers the bracket [m, K*m] within one (1+eps) factor
+    assert vs[0] >= lad.K * lad.m / (1 + lad.eps)
+    assert vs[-1] <= lad.m * (1 + lad.eps)

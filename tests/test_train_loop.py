@@ -1,0 +1,130 @@
+"""Fault-tolerant loop: resume-after-kill reproducibility, preemption,
+straggler detection, microbatch grad-accum equivalence, int8 compression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointStore
+from repro.configs import get_config
+from repro.data import TokenStreamSpec, deterministic_batch_fn
+from repro.models import Model
+from repro.train import (AdamWConfig, TrainStepConfig, init_opt_state,
+                         make_train_step)
+from repro.train.loop import LoopConfig, run_training
+from repro.train.step import make_grad_fn
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=20, warmup_steps=2)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    batch_fn = deterministic_batch_fn(
+        0, TokenStreamSpec(vocab=cfg.vocab, seq=16, batch=4))
+    return model, params, opt_cfg, step, batch_fn
+
+
+def test_loss_decreases(setup):
+    model, params, opt_cfg, step, batch_fn = setup
+    opt = init_opt_state(params, opt_cfg)
+    first = last = None
+    p = params
+    for i in range(10):
+        p, opt, m = step(p, opt, batch_fn(0))  # same batch -> must overfit
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first
+
+
+def test_restart_is_reproducible(tmp_path, setup):
+    """Kill after 6 steps, restart, final params == uninterrupted run."""
+    model, params, opt_cfg, step, batch_fn = setup
+
+    def run(store, total, preempt_at=None):
+        opt = init_opt_state(params, opt_cfg)
+        calls = {"n": 0}
+
+        def sig():
+            calls["n"] += 1
+            return preempt_at is not None and calls["n"] >= preempt_at
+
+        cfg = LoopConfig(total_steps=total, ckpt_every=3, log_every=100)
+        return run_training(step, params, opt, batch_fn, store, cfg,
+                            preemption_signal=sig, log=lambda s: None)
+
+    # uninterrupted reference
+    sA = CheckpointStore(tmp_path / "a")
+    pA, _, repA = run(sA, total=10)
+    # interrupted at step 6, then resumed
+    sB = CheckpointStore(tmp_path / "b")
+    _, _, rep1 = run(sB, total=10, preempt_at=6)
+    assert rep1.preempted and rep1.end_step == 6
+    pB, _, rep2 = run(sB, total=10)
+    assert rep2.start_step == 6 and rep2.end_step == 10
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-5, atol=1e-6), pA, pB)
+
+
+def test_straggler_detection(tmp_path, setup):
+    model, params, opt_cfg, step, batch_fn = setup
+    import time
+
+    slow = {8}
+
+    def slow_step(p, o, b):
+        out = step(p, o, b)
+        jax.block_until_ready(out[0])
+        if slow_step.calls in slow:
+            time.sleep(1.0)
+        slow_step.calls += 1
+        return out
+
+    slow_step.calls = 0
+    opt = init_opt_state(params, opt_cfg)
+    store = CheckpointStore(tmp_path)
+    cfg = LoopConfig(total_steps=12, ckpt_every=100, log_every=100,
+                     straggler_factor=4.0)
+    _, _, rep = run_training(slow_step, params, opt, batch_fn, store, cfg,
+                             log=lambda s: None)
+    assert rep.stragglers == [9]  # 1-indexed step after the slow call
+
+
+def test_microbatch_equivalence(setup):
+    """grad(full batch) == mean of microbatch grads (fp32 end to end)."""
+    model, params, opt_cfg, _, batch_fn = setup
+    model = Model(dataclasses.replace(model.cfg, dtype="float32"))
+    batch = batch_fn(0)
+    g1, _ = make_grad_fn(model, TrainStepConfig(num_microbatches=1))(
+        params, batch)
+    g4, _ = make_grad_fn(model, TrainStepConfig(num_microbatches=4))(
+        params, batch)
+    flat1 = jax.tree_util.tree_leaves(g1)
+    flat4 = jax.tree_util.tree_leaves(g4)
+    for a, b in zip(flat1, flat4):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_watchdog_raises(tmp_path, setup):
+    model, params, opt_cfg, step, batch_fn = setup
+    import time
+
+    def hung_step(p, o, b):
+        time.sleep(0.2)
+        return step(p, o, b)
+
+    opt = init_opt_state(params, opt_cfg)
+    store = CheckpointStore(tmp_path)
+    cfg = LoopConfig(total_steps=3, ckpt_every=100, max_step_s=0.05)
+    with pytest.raises(TimeoutError):
+        run_training(hung_step, params, opt, batch_fn, store, cfg,
+                     log=lambda s: None)
