@@ -1,0 +1,18 @@
+# Convenience targets; CI (.github/workflows/ci.yml) calls these verbatim.
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: verify bench-oracle bench
+
+# tier-1: the gate every PR must keep green
+verify:
+	python -m pytest -x -q
+
+# GainOracle backend A/B sweep -> BENCH_oracle.json
+bench-oracle:
+	python -m benchmarks.kernel_bench --oracle-json BENCH_oracle.json
+
+# full benchmark harness (paper tables + kernels + roofline)
+bench:
+	python -m benchmarks.run

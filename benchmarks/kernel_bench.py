@@ -1,20 +1,29 @@
-"""Kernel micro-benchmarks: the rbf_gain fused oracle vs its unfused
+"""Kernel micro-benchmarks: the fused gain oracle vs its unfused
 reference, and the fused-batch oracle scaling that underpins the paper's
 '1 query per element' -> '1 fused query per batch' adaptation.
 
 CPU numbers are *relative* (the target is TPU); the benchmark demonstrates
 the fusion win is structural (fewer passes over the data), not
 backend-specific.
+
+``oracle_backend_sweep`` A/Bs the ``GainOracle`` backends over a shape grid
+and writes ``BENCH_oracle.json``:
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench --oracle-json BENCH_oracle.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import List
+from pathlib import Path
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.api import make_objective
+from repro.core.oracle import GainOracle, resolve_backend
 
 
 def _time(fn, *args, iters=20):
@@ -27,13 +36,17 @@ def _time(fn, *args, iters=20):
     return (time.time() - t0) / iters
 
 
-def fused_vs_periotem(out: List[str], *, K=64, d=64, B=512):
-    f = make_objective(K, d)
+def _summary_state(f, n_fill, seed=0):
     state = f.init()
-    key = jax.random.PRNGKey(0)
-    # half-filled summary (the steady-state regime)
-    for x in jax.random.normal(key, (K // 2, d)):
+    for x in jax.random.normal(jax.random.PRNGKey(seed), (n_fill, f.d)):
         state = f.append(state, x)
+    return state
+
+
+def fused_vs_peritem(out: List[str], *, K=64, d=64, B=512):
+    f = make_objective(K, d)
+    # half-filled summary (the steady-state regime)
+    state = _summary_state(f, K // 2)
     X = jax.random.normal(jax.random.PRNGKey(1), (B, d))
 
     batched = jax.jit(f.gains)
@@ -59,24 +72,81 @@ def fused_vs_periotem(out: List[str], *, K=64, d=64, B=512):
 
 
 def pallas_interpret_check(out: List[str]):
-    """rbf_gain Pallas kernel (interpret mode) vs pure-jnp ref."""
-    from repro.kernels.rbf_gain import rbf_gain, rbf_gain_ref
+    """Fused gain Pallas kernel (interpret mode) vs pure-jnp ref."""
+    from repro.kernels.rbf_gain import rbf_gain
 
     K, d, B = 32, 64, 256
-    key = jax.random.PRNGKey(0)
-    feats = jax.random.normal(key, (K, d))
-    Linv = jnp.eye(K)
+    f = make_objective(K, d, lengthscale=(1.0 / 0.5) ** 0.5)  # inv2l2 = 0.25
+    state = _summary_state(f, K // 2)
     X = jax.random.normal(jax.random.PRNGKey(1), (B, d))
-    n = jnp.int32(K)
-    ref = rbf_gain_ref(X, feats, Linv, n, a=1.0, inv2l2=0.25)
-    pal = rbf_gain(X, feats, Linv, n, a=1.0, inv2l2=0.25,
-                   use_pallas=True, interpret=True)
+    args = (X, state.feats, state.Linv, state.n)
+    ref = rbf_gain(*args, a=1.0, inv2l2=0.25)
+    pal = rbf_gain(*args, a=1.0, inv2l2=0.25, use_pallas=True, interpret=True)
     err = float(jnp.max(jnp.abs(ref - pal)))
     out.append(f"pallas rbf_gain interpret-mode max|err| vs ref: {err:.2e}")
-    t_ref = _time(lambda *a: rbf_gain(*a, a=1.0, inv2l2=0.25),
-                  X, feats, Linv, n)
+    t_ref = _time(lambda *a: rbf_gain(*a, a=1.0, inv2l2=0.25), *args)
     out.append(f"  jnp reference path: {1e3 * t_ref:.3f} ms/call "
                f"(K={K} d={d} B={B}; TPU kernel timing requires hardware)")
+
+
+ORACLE_SHAPES = [
+    # (B, K, d) — aligned and ragged
+    (256, 32, 64),
+    (512, 64, 128),
+    (300, 100, 300),
+    (1024, 128, 128),
+]
+
+
+def oracle_backend_sweep(out: List[str], *, json_path=None,
+                         kinds=("rbf", "linear_norm")) -> List[Dict]:
+    """A/B the GainOracle backends over a (B, K, d) x kind grid.
+
+    Timed backends: ``jnp`` and (on TPU) ``pallas``.  ``pallas-interpret``
+    is run once per row at a reduced batch for a correctness cross-check —
+    its timing is meaningless (it is an interpreter) so only the error is
+    recorded.
+    """
+    rows: List[Dict] = []
+    timed = ["jnp"] + (["pallas"] if resolve_backend("auto") == "pallas"
+                       else [])
+    out.append(f"oracle backend sweep (timed: {', '.join(timed)}; "
+               f"interpret checked at B=32)")
+    for kind in kinds:
+        for (B, K, d) in ORACLE_SHAPES:
+            f = make_objective(K, d, kernel_kind=kind)
+            state = _summary_state(f, K // 2)
+            X = jax.random.normal(jax.random.PRNGKey(1), (B, d))
+            base = None
+            for backend in timed:
+                o = GainOracle(kernel=f.kernel, a=f.a, backend=backend)
+                fn = jax.jit(o.gains)
+                t = _time(fn, state.feats, state.Linv, state.n, X, iters=10)
+                g = fn(state.feats, state.Linv, state.n, X)
+                base = g if base is None else base
+                rows.append({"kind": kind, "B": B, "K": K, "d": d,
+                             "backend": backend, "ms": 1e3 * t,
+                             "resolved": o.resolved})
+            # correctness cross-check through the Pallas interpreter
+            oi = GainOracle(kernel=f.kernel, a=f.a,
+                            backend="pallas-interpret")
+            Bi = min(B, 32)
+            gi = oi.gains(state.feats, state.Linv, state.n, X[:Bi])
+            err = float(jnp.max(jnp.abs(gi - base[:Bi])))
+            rows.append({"kind": kind, "B": Bi, "K": K, "d": d,
+                         "backend": "pallas-interpret", "ms": None,
+                         "max_abs_err_vs_jnp": err,
+                         "resolved": "pallas-interpret"})
+            t_jnp = next(r["ms"] for r in rows
+                         if r["backend"] == "jnp" and r["kind"] == kind
+                         and r["B"] == B and r["K"] == K and r["d"] == d)
+            out.append(f"  {kind:12s} B={B:5d} K={K:4d} d={d:4d}  "
+                       f"jnp {t_jnp:8.3f} ms  interpret-err {err:.2e}")
+    if json_path is not None:
+        Path(json_path).write_text(json.dumps(
+            {"device": jax.default_backend(), "rows": rows}, indent=1))
+        out.append(f"  wrote {json_path}")
+    return rows
 
 
 def ssd_interpret_check(out: List[str]):
@@ -98,9 +168,22 @@ def ssd_interpret_check(out: List[str]):
                f"(b={b} L={L} h={h} p={p} n={n} chunk={chunk})")
 
 
-def run_all() -> List[str]:
+def run_all(json_path=None) -> List[str]:
     out: List[str] = []
-    fused_vs_periotem(out)
+    fused_vs_peritem(out)
     pallas_interpret_check(out)
+    oracle_backend_sweep(out, json_path=json_path)
     ssd_interpret_check(out)
     return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--oracle-json", default="BENCH_oracle.json",
+                    help="path for the oracle A/B sweep results")
+    args = ap.parse_args(argv)
+    print("\n".join(run_all(json_path=args.oracle_json)))
+
+
+if __name__ == "__main__":
+    main()

@@ -39,7 +39,7 @@ def _materialize(seed, spec, n_chunks, chunk, drift=False):
 def _run_algo(name, K, d, chunks, *, eps=0.01, T=1000) -> Dict:
     algo = make(name, K=K, d=d, eps=eps, T=T)
     state = algo.init()
-    runner = jax.jit(getattr(algo, "run_batched", None) or algo.run)
+    runner = jax.jit(algo.run_batched)  # uniform chunk path (see core.api)
     # warmup compile (excluded from timing, as the paper's C++ has no jit)
     _ = jax.block_until_ready(
         jax.tree_util.tree_leaves(runner(state, chunks[0]))[0])

@@ -28,7 +28,7 @@ def main(argv=None):
         lines += paper_tables.run_all()
     if only is None or "kernels" in only:
         lines.append("== kernel micro-benchmarks ==")
-        lines += kernel_bench.run_all()
+        lines += kernel_bench.run_all(json_path="BENCH_oracle.json")
         lines.append("")
     if only is None or "roofline" in only:
         d = Path("experiments/dryrun")

@@ -23,14 +23,15 @@ spec = MixtureSpec(n_components=12, d=D, spread=6.0)
 def run(name, **kw):
     algo = make(name, K=K, d=D, **kw)
     state = algo.init()
-    runner = jax.jit(getattr(algo, "run_batched", None) or algo.run)
+    # uniform protocol: run_batched is the chunk path for every algorithm
+    # (fused fast path for the sieve family, run alias for the baselines)
+    runner = jax.jit(algo.run_batched)
     stream = drifting_mixture(0, spec, CHUNK, drift_per_chunk=0.05,
                               introduce_every=10)
     t0 = time.time()
     for _ in range(CHUNKS):
         state = runner(state, next(stream))
-    jax.block_until_ready(state.ld.fval if hasattr(state, "ld") else
-                          jax.tree_util.tree_leaves(state)[0])
+    jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
     dt = time.time() - t0
     feats, n, fval = algo.summary(state)
     mem = algo.memory_elements(state)

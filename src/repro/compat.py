@@ -1,0 +1,26 @@
+"""Version-compat shims for the JAX APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (keyword
+``check_rep``) to ``jax.shard_map`` (keyword ``check_vma``).  Call sites in
+this repo use the new-style keyword; the shim translates for older JAX.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6: top-level export, `check_vma` keyword
+    from jax import shard_map as _shard_map
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x: experimental module, `check_rep` keyword
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` with the replication-check keyword normalized."""
+    kw = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+__all__ = ["shard_map"]

@@ -1,18 +1,23 @@
 """repro.core — streaming submodular function maximization (the paper's
 contribution) as composable JAX modules."""
-from .api import ALGORITHMS, make, make_objective
+from .api import ALGORITHMS, SIEVE_FAMILY, make, make_objective
 from .functions import (KernelConfig, LogDet, LogDetState, naive_logdet,
                         rbf_lengthscale_batch, rbf_lengthscale_stream)
 from .greedy import Greedy
+from .oracle import GainOracle
 from .salsa import Salsa
+from .sieve_family import (SieveAlgorithm, StackedSieve, residual_threshold,
+                           stack_states)
 from .sieves import SieveStreaming, SieveState, sieve_streaming_pp
 from .threesieves import ThreeSieves, TSState
 from .thresholds import Ladder
 
 __all__ = [
-    "ALGORITHMS", "make", "make_objective",
+    "ALGORITHMS", "SIEVE_FAMILY", "make", "make_objective",
     "KernelConfig", "LogDet", "LogDetState", "naive_logdet",
     "rbf_lengthscale_batch", "rbf_lengthscale_stream",
-    "Greedy", "Salsa", "SieveStreaming", "SieveState", "sieve_streaming_pp",
+    "GainOracle", "Greedy", "Salsa",
+    "SieveAlgorithm", "StackedSieve", "residual_threshold", "stack_states",
+    "SieveStreaming", "SieveState", "sieve_streaming_pp",
     "ThreeSieves", "TSState", "Ladder",
 ]

@@ -1,19 +1,30 @@
 """Uniform registry over all summary-selection algorithms.
 
-Every algorithm exposes::
+Every algorithm exposes the uniform protocol::
 
-    algo.init()            -> state
-    algo.step(state, x)    -> state          (one stream item)
-    algo.run(state, X)     -> state          (scan over a chunk)
-    algo.summary(state)    -> (feats, n, fval)
+    algo.init()                -> state
+    algo.step(state, x)        -> state      (one stream item)
+    algo.run(state, X)         -> state      (per-item scan over a chunk)
+    algo.run_batched(state, X) -> state      (chunked fast path; results
+                                              equal ``run`` on any stream)
+    algo.summary(state)        -> (feats, n, fval)
     algo.memory_elements(state)              (paper Table-1 metric)
 
+The sieve family (threesieves, sievestreaming, sievestreaming++, salsa)
+implements ``run_batched`` as a fused-oracle fast path — one batched gain
+pass per state change (see ``sieve_family``); the remaining baselines alias
+it to ``run``.
+
 ``make(name, K, d, ...)`` builds an algorithm bound to the paper's LogDet
-objective with the paper's kernel conventions.
+objective with the paper's kernel conventions.  ``backend`` selects the
+marginal-gain oracle implementation (``jnp`` | ``pallas`` |
+``pallas-interpret`` | ``auto``); ``None`` defers to the
+``REPRO_ORACLE_BACKEND`` env var, else ``auto`` (fused Pallas kernel on
+TPU, jnp elsewhere).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 from .baselines import (IndependentSetImprovement, PreemptionStreaming,
                         QuickStream, RandomReservoir)
@@ -35,21 +46,34 @@ ALGORITHMS = (
     "greedy",
 )
 
+# the members of the sieve family: share the threshold-ladder accept rule and
+# a fused-oracle ``run_batched`` fast path (DESIGN.md §4)
+SIEVE_FAMILY = (
+    "threesieves",
+    "sievestreaming",
+    "sievestreaming++",
+    "salsa",
+)
+
 
 def make_objective(K: int, d: int, a: float = 1.0,
                    lengthscale: float | None = None,
-                   kernel_kind: str = "rbf") -> LogDet:
+                   kernel_kind: str = "rbf",
+                   backend: str | None = None) -> LogDet:
     if lengthscale is None:
         lengthscale = rbf_lengthscale_batch(d)
     return LogDet(K=K, d=d, a=a,
-                  kernel=KernelConfig(kind=kernel_kind, lengthscale=lengthscale))
+                  kernel=KernelConfig(kind=kernel_kind,
+                                      lengthscale=lengthscale),
+                  backend=backend)
 
 
 def make(name: str, K: int, d: int, *, a: float = 1.0,
          lengthscale: float | None = None, eps: float = 0.1, T: int = 500,
-         c: int = 4, kernel_kind: str = "rbf") -> Any:
+         c: int = 4, kernel_kind: str = "rbf",
+         backend: str | None = None) -> Any:
     f = make_objective(K, d, a=a, lengthscale=lengthscale,
-                       kernel_kind=kernel_kind)
+                       kernel_kind=kernel_kind, backend=backend)
     name = name.lower()
     if name == "threesieves":
         return ThreeSieves(f=f, T=T, eps=eps)

@@ -71,6 +71,10 @@ class RandomReservoir:
         out, _ = jax.lax.scan(body, state, X)
         return out
 
+    def run_batched(self, state: RandomState, X: Array) -> RandomState:
+        """Uniform-protocol alias — no batched fast path for this baseline."""
+        return self.run(state, X)
+
     def summary(self, state: RandomState) -> Tuple[Array, Array, Array]:
         fval = self.f.evaluate(state.feats, state.n)
         return state.feats, state.n, fval
@@ -134,6 +138,10 @@ class IndependentSetImprovement:
         out, _ = jax.lax.scan(body, state, X)
         return out
 
+    def run_batched(self, state: ISIState, X: Array) -> ISIState:
+        """Uniform-protocol alias — no batched fast path for this baseline."""
+        return self.run(state, X)
+
     def summary(self, state: ISIState) -> Tuple[Array, Array, Array]:
         return state.ld.feats, state.ld.n, state.ld.fval
 
@@ -185,6 +193,10 @@ class PreemptionStreaming:
 
         out, _ = jax.lax.scan(body, ld, X)
         return out
+
+    def run_batched(self, ld: LogDetState, X: Array) -> LogDetState:
+        """Uniform-protocol alias — no batched fast path for this baseline."""
+        return self.run(ld, X)
 
     def summary(self, ld: LogDetState) -> Tuple[Array, Array, Array]:
         return ld.feats, ld.n, ld.fval
@@ -276,6 +288,10 @@ class QuickStream:
 
         out, _ = jax.lax.scan(body, state, X)
         return out
+
+    def run_batched(self, state: QSState, X: Array) -> QSState:
+        """Uniform-protocol alias — no batched fast path for this baseline."""
+        return self.run(state, X)
 
     def summary(self, state: QSState) -> Tuple[Array, Array, Array]:
         """Final step: greedy-ish pick of K from the ring (best partition)."""

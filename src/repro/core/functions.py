@@ -112,6 +112,11 @@ class LogDet:
     """The IVM objective bound to a kernel and scale ``a``.
 
     All methods are pure and jittable; ``self`` is a static argument.
+
+    ``backend`` selects the marginal-gain oracle implementation
+    (``jnp`` | ``pallas`` | ``pallas-interpret`` | ``auto``); ``None``
+    defers to the process default (``REPRO_ORACLE_BACKEND`` env var, else
+    ``auto``).  See ``repro.core.oracle`` / DESIGN.md §5.
     """
 
     K: int
@@ -119,6 +124,15 @@ class LogDet:
     kernel: KernelConfig = KernelConfig()
     a: float = 1.0
     dtype: jnp.dtype = jnp.float32
+    backend: str | None = None
+
+    @property
+    def oracle(self):
+        """The batched gain oracle every query below routes through."""
+        from . import oracle
+
+        return oracle.make(self.kernel, self.a, backend=self.backend,
+                           dtype=self.dtype)
 
     # -- constants -----------------------------------------------------------
     @property
@@ -148,19 +162,14 @@ class LogDet:
     def gains(self, state: LogDetState, X: Array) -> Array:
         """Marginal gains Delta_f(x | S) for a batch X (B, d) -> (B,).
 
-        One fused batch query: (K,B) kernel block, one (K,K)x(K,B) matmul.
+        One fused batch query — (K,B) kernel block, one (K,K)x(K,B) matmul —
+        dispatched through the pluggable ``GainOracle`` backend.
         """
-        X = X.astype(self.dtype)
-        mask = self._mask(state)  # (K,)
-        KX = self.kernel.pairwise(state.feats, X) * mask[:, None]  # (K, B)
-        C = state.Linv @ (self.a * KX)  # (K, B)
-        cn2 = jnp.sum(C * C, axis=0)  # (B,)
-        dd2 = jnp.maximum((1.0 + self.a) - cn2, 1e-12)
-        return 0.5 * jnp.log(dd2)
+        return self.oracle.gains(state.feats, state.Linv, state.n, X)
 
     def gain1(self, state: LogDetState, x: Array) -> Array:
         """Single-item marginal gain (d,) -> ()."""
-        return self.gains(state, x[None, :])[0]
+        return self.oracle.gain1(state.feats, state.Linv, state.n, x)
 
     # -- update ---------------------------------------------------------------
     def append(self, state: LogDetState, x: Array) -> LogDetState:

@@ -12,6 +12,10 @@ simplification in EXPERIMENTS.md §Repro):
 
 Memory is rules x rungs summaries — the largest of all baselines, matching
 the paper's measurement that Salsa uses the most memory.
+
+Execution paths (per-item ``run`` and the chunked ``run_batched`` fast
+path) derive from the shared ``StackedSieve`` engine (DESIGN.md §4): the
+rule/rung instances are one stacked axis of NUM_RULES * num_rungs states.
 """
 from __future__ import annotations
 
@@ -21,9 +25,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .functions import LogDet, LogDetState
-from .sieves import SieveState, _stack
-from .thresholds import Ladder
+from .sieve_family import StackedSieve, residual_threshold, stack_states
+from .sieves import SieveState
 
 Array = jax.Array
 
@@ -31,57 +34,52 @@ NUM_RULES = 3
 
 
 @dataclasses.dataclass(frozen=True)
-class Salsa:
-    f: LogDet
-    eps: float = 0.1
-
+class Salsa(StackedSieve):
     @property
-    def ladder(self) -> Ladder:
-        return Ladder(eps=self.eps, m=self.f.singleton_value, K=self.f.K)
+    def n_instances(self) -> int:
+        return NUM_RULES * self.ladder.num_rungs
 
     def init(self) -> SieveState:
-        n_inst = NUM_RULES * self.ladder.num_rungs
+        n_inst = self.n_instances
         return SieveState(
-            lds=_stack(self.f.init(), n_inst),
+            lds=stack_states(self.f.init(), n_inst),
             alive=jnp.ones((n_inst,), bool),
             lb=jnp.zeros((), jnp.float32),
             n_queries=jnp.zeros((), jnp.int32),
             peak_mem=jnp.zeros((), jnp.int32),
         )
 
-    def _thresholds(self, fvals: Array, ns: Array) -> Array:
+    # ------------------------------------------------- per-item decision parts
+    def _thresholds(self, state: SieveState) -> Array:
         """(n_inst,) acceptance thresholds given per-instance f and |S|."""
+        fvals, ns = state.lds.fval, state.lds.n
         nv = self.ladder.num_rungs
         vs = jnp.tile(self.ladder.values(), NUM_RULES)  # (n_inst,)
         rule = jnp.repeat(jnp.arange(NUM_RULES), nv)
-        denom = jnp.maximum(self.f.K - ns, 1).astype(fvals.dtype)
-        thr0 = (vs / 2.0 - fvals) / denom
+        thr0 = residual_threshold(vs / 2.0, fvals, ns, self.f.K)
         thr1 = jnp.broadcast_to(vs / (2.0 * self.f.K), fvals.shape)
-        thr2 = (2.0 * vs / 3.0 - fvals) / denom
+        thr2 = residual_threshold(2.0 * vs / 3.0, fvals, ns, self.f.K)
         return jnp.select([rule == 0, rule == 1, rule == 2], [thr0, thr1, thr2])
 
-    def step(self, state: SieveState, x: Array) -> SieveState:
+    def _can_accept(self, state: SieveState) -> Array:
+        return state.lds.n < self.f.K
+
+    def _apply_item(self, state: SieveState, x: Array,
+                    takes: Array) -> SieveState:
         f = self.f
-        thr = self._thresholds(state.lds.fval, state.lds.n)
-
-        def one(ld: LogDetState, t: Array) -> LogDetState:
-            gain = f.gain1(ld, x)
-            take = (gain >= t) & (ld.n < f.K)
-            return f.maybe_append(ld, x, take)
-
-        lds = jax.vmap(one, in_axes=(0, 0))(state.lds, thr)
-        nq = state.n_queries + thr.shape[0]
+        lds = jax.vmap(lambda ld, take: f.maybe_append(ld, x, take))(
+            state.lds, takes)
+        nq = state.n_queries + self.n_instances
         peak = jnp.maximum(state.peak_mem, jnp.sum(lds.n))
         return SieveState(lds=lds, alive=state.alive, lb=state.lb,
                           n_queries=nq, peak_mem=peak)
 
-    def run(self, state: SieveState, X: Array) -> SieveState:
-        def body(s, x):
-            return self.step(s, x), None
+    def _bulk_reject(self, state: SieveState, r: Array) -> SieveState:
+        nq = state.n_queries + r * self.n_instances
+        peak = jnp.maximum(state.peak_mem, jnp.sum(state.lds.n))
+        return dataclasses.replace(state, n_queries=nq, peak_mem=peak)
 
-        out, _ = jax.lax.scan(body, state, X)
-        return out
-
+    # --------------------------------------------------------------- results
     def summary(self, state: SieveState) -> Tuple[Array, Array, Array]:
         i = jnp.argmax(state.lds.fval)
         return state.lds.feats[i], state.lds.n[i], state.lds.fval[i]

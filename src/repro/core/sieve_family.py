@@ -1,0 +1,184 @@
+"""Shared machinery for the sieve family of streaming algorithms.
+
+ThreeSieves, SieveStreaming, SieveStreaming++ and Salsa all make the same
+accept decision — is the marginal gain of item x at least the *residual*
+threshold of some OPT guess v —
+
+    Delta_f(x | S)  >=  (target(v) - f(S)) / (K - |S|)
+
+and differ only in how many summaries they keep and how the guess evolves.
+This module centralizes that arithmetic and the two execution paths every
+member exposes (DESIGN.md §4):
+
+  * ``run``          — faithful per-item ``lax.scan`` over ``step``,
+  * ``run_batched``  — chunked fast path: between accepts nothing a
+                       threshold depends on changes, so a single fused
+                       gains pass (``LogDet.gains`` -> ``GainOracle``)
+                       prices every remaining item and the next accept
+                       position is an argmax.  One fused pass per
+                       state-change, not per item.
+
+``StackedSieve`` implements the batched engine generically for algorithms
+that keep one summary per (rule, rung) instance as a stacked
+``LogDetState`` pytree (SieveStreaming, SieveStreaming++, Salsa);
+ThreeSieves keeps a single summary plus a rejection counter and ships its
+own specialization of the same idea (closed-form rung descent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .functions import LogDet, LogDetState
+from .thresholds import Ladder
+
+Array = jax.Array
+
+
+def residual_threshold(target, fval, n, K: int):
+    """(target - f(S)) / max(K - |S|, 1) — the family's accept bar.
+
+    ``target`` is the rung-dependent numerator (v/2 for the SieveStreaming
+    rule, 2v/3 for Salsa's eager rule, ...); broadcasts over stacked
+    instances.
+    """
+    denom = jnp.maximum(K - n, 1).astype(fval.dtype)
+    return (target - fval) / denom
+
+
+def stack_states(tree, n: int):
+    """Broadcast one state pytree to a stacked (n, ...) instance axis."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), tree
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SieveAlgorithm:
+    """Base protocol: init / step / run / run_batched / summary.
+
+    Subclasses implement ``step`` (one stream item) and may override
+    ``run_batched`` with a fast path; the default chunk paths here are
+    semantically exact by construction.
+    """
+
+    f: LogDet
+    eps: float = 0.1
+
+    @property
+    def ladder(self) -> Ladder:
+        return Ladder(eps=self.eps, m=self.f.singleton_value, K=self.f.K)
+
+    def init(self):
+        raise NotImplementedError
+
+    def step(self, state, x: Array):
+        raise NotImplementedError
+
+    def run(self, state, X: Array):
+        """Faithful scan over a chunk of the stream X (B, d)."""
+        def body(s, x):
+            return self.step(s, x), None
+
+        out, _ = jax.lax.scan(body, state, X)
+        return out
+
+    def run_batched(self, state, X: Array):
+        """Chunked fast path; default = ``run`` (always semantically equal)."""
+        return self.run(state, X)
+
+    def summary(self, state) -> Tuple[Array, Array, Array]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedSieve(SieveAlgorithm):
+    """Sieve algorithms that keep one summary per stacked instance.
+
+    Subclasses provide the per-item decision pieces; ``step`` and the
+    batched engine below are derived from them, so ``run`` and
+    ``run_batched`` cannot drift apart:
+
+      * ``_thresholds(state) -> (n_inst,)``   accept bars (pre-item state)
+      * ``_can_accept(state) -> (n_inst,)``   eligibility mask
+      * ``_apply_item(state, x, takes)``      appends + bookkeeping for one
+                                              item with known accept mask
+      * ``_bulk_reject(state, r)``            bookkeeping for r consecutive
+                                              all-reject items, closed form
+    """
+
+    @property
+    def n_instances(self) -> int:
+        raise NotImplementedError
+
+    def _thresholds(self, state) -> Array:
+        raise NotImplementedError
+
+    def _can_accept(self, state) -> Array:
+        raise NotImplementedError
+
+    def _apply_item(self, state, x: Array, takes: Array):
+        raise NotImplementedError
+
+    def _bulk_reject(self, state, r: Array):
+        raise NotImplementedError
+
+    def _gains_all(self, state, X: Array) -> Array:
+        """One fused oracle pass per instance, vmapped: (n_inst, B)."""
+        return jax.vmap(lambda ld: self.f.gains(ld, X))(state.lds)
+
+    # ------------------------------------------------------------------ step
+    def step(self, state, x: Array):
+        """Process one stream item across all instances (lockstep vmap)."""
+        g = jax.vmap(lambda ld: self.f.gain1(ld, x))(state.lds)  # (n_inst,)
+        takes = (g >= self._thresholds(state)) & self._can_accept(state)
+        return self._apply_item(state, x, takes)
+
+    # ---------------------------------------------------------- TPU fast path
+    def run_batched(self, state, X: Array):
+        """Semantically identical to ``run`` — one fused gains pass per
+        state change.
+
+        Between accepts no instance's (f(S), |S|, liveness) changes, so
+        thresholds are constant and one vmapped ``gains`` pass prices the
+        whole remaining chunk for every instance; the earliest accepting
+        item is an argmax.  At that item every instance decides with its
+        pre-item state (exactly as in ``step``), the rejected prefix is
+        folded into closed-form bookkeeping, and gains are recomputed only
+        after the accept mutates the stacked summaries.
+        """
+        B = X.shape[0]
+        idx = jnp.arange(B, dtype=jnp.int32)
+
+        def cond(carry):
+            _, cursor = carry
+            return cursor < B
+
+        def body(carry):
+            st, cursor = carry
+            # every iteration follows a state change (or is the first), so
+            # gains are always stale here — one fused pass per iteration
+            gains = self._gains_all(st, X)  # (n_inst, B)
+            thr = self._thresholds(st)  # (n_inst,)
+            can = self._can_accept(st)  # (n_inst,)
+            acc = (gains >= thr[:, None]) & can[:, None]  # (n_inst, B)
+            acc_item = jnp.any(acc, axis=0) & (idx >= cursor)  # (B,)
+            exists = jnp.any(acc_item)
+            p = jnp.argmax(acc_item)  # first accepting item
+
+            def on_accept():
+                st2 = self._bulk_reject(st, p - cursor)
+                st3 = self._apply_item(st2, X[p], acc[:, p])
+                return st3, p + 1
+
+            def on_no_accept():
+                st2 = self._bulk_reject(st, B - cursor)
+                return st2, jnp.int32(B)
+
+            return jax.lax.cond(exists, on_accept, on_no_accept)
+
+        out, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+        return out

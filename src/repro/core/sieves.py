@@ -11,6 +11,10 @@ SieveStreaming++ additionally tracks LB = max_v f(S_v) and deactivates rungs
 below tau_min = max(LB, m) / (2K).  Fixed-shape JAX buffers cannot shrink, so
 the paper-comparable *effective memory* (live sieves) is reported from the
 activity mask by ``memory_elements``.
+
+Both execution paths — per-item ``run`` and the chunked ``run_batched``
+fast path (one fused gains pass per state change) — derive from the shared
+``StackedSieve`` engine in ``sieve_family`` (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -21,15 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from .functions import LogDet, LogDetState
-from .thresholds import Ladder
+from .sieve_family import StackedSieve, residual_threshold, stack_states
 
 Array = jax.Array
-
-
-def _stack(tree, n: int):
-    return jax.tree_util.tree_map(
-        lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), tree
-    )
 
 
 @jax.tree_util.register_dataclass
@@ -43,62 +41,65 @@ class SieveState:
 
 
 @dataclasses.dataclass(frozen=True)
-class SieveStreaming:
+class SieveStreaming(StackedSieve):
     """Classic SieveStreaming: every rung is always live."""
 
-    f: LogDet
-    eps: float = 0.1
     plus_plus: bool = False  # SieveStreaming++ behaviour
 
     @property
-    def ladder(self) -> Ladder:
-        return Ladder(eps=self.eps, m=self.f.singleton_value, K=self.f.K)
+    def n_instances(self) -> int:
+        return self.ladder.num_rungs
 
     def init(self) -> SieveState:
         nv = self.ladder.num_rungs
         return SieveState(
-            lds=_stack(self.f.init(), nv),
+            lds=stack_states(self.f.init(), nv),
             alive=jnp.ones((nv,), bool),
             lb=jnp.zeros((), jnp.float32),
             n_queries=jnp.zeros((), jnp.int32),
             peak_mem=jnp.zeros((), jnp.int32),
         )
 
-    # ------------------------------------------------------------------ step
-    def step(self, state: SieveState, x: Array) -> SieveState:
-        f = self.f
+    # ------------------------------------------------- per-item decision parts
+    def _thresholds(self, state: SieveState) -> Array:
         vs = self.ladder.values()  # (nv,)
+        return residual_threshold(vs / 2.0, state.lds.fval, state.lds.n,
+                                  self.f.K)
 
-        def one(ld: LogDetState, v: Array, active: Array) -> LogDetState:
-            gain = f.gain1(ld, x)
-            denom = jnp.maximum(f.K - ld.n, 1).astype(ld.fval.dtype)
-            thr = (v / 2.0 - ld.fval) / denom
-            take = (gain >= thr) & (ld.n < f.K) & active
-            return f.maybe_append(ld, x, take)
+    def _can_accept(self, state: SieveState) -> Array:
+        return state.alive & (state.lds.n < self.f.K)
 
-        lds = jax.vmap(one, in_axes=(0, 0, 0))(state.lds, vs, state.alive)
+    def _apply_item(self, state: SieveState, x: Array,
+                    takes: Array) -> SieveState:
+        f = self.f
+        lds = jax.vmap(lambda ld, take: f.maybe_append(ld, x, take))(
+            state.lds, takes)
 
-        lb = jnp.maximum(state.lb, jnp.max(lds.fval)) if self.plus_plus else state.lb
         if self.plus_plus:
+            lb = jnp.maximum(state.lb, jnp.max(lds.fval))
             # v is an OPT guess: once LB = max_v f(S_v) exceeds v, the guess
             # cannot lie in [(1-eps) OPT, OPT] any more -> kill the sieve.
             # (Kazemi et al. state this via tau_min = max(LB, m)/(2K) on the
             # per-item thresholds; v < LB is the same test on OPT guesses.)
-            alive = state.alive & (vs > lb)
+            alive = state.alive & (self.ladder.values() > lb)
         else:
-            alive = state.alive
+            lb, alive = state.lb, state.alive
         nq = state.n_queries + jnp.sum(alive.astype(jnp.int32))
         peak = jnp.maximum(state.peak_mem,
                            jnp.sum(jnp.where(alive, lds.n, 0)))
         return SieveState(lds=lds, alive=alive, lb=lb, n_queries=nq,
                           peak_mem=peak)
 
-    def run(self, state: SieveState, X: Array) -> SieveState:
-        def body(s, x):
-            return self.step(s, x), None
+    def _bulk_reject(self, state: SieveState, r: Array) -> SieveState:
+        """r consecutive all-reject items in closed form.
 
-        out, _ = jax.lax.scan(body, state, X)
-        return out
+        Rejections leave every summary — hence lb, alive and the live
+        element count — unchanged, so only the query counter moves.
+        """
+        nq = state.n_queries + r * jnp.sum(state.alive.astype(jnp.int32))
+        peak = jnp.maximum(state.peak_mem,
+                           jnp.sum(jnp.where(state.alive, state.lds.n, 0)))
+        return dataclasses.replace(state, n_queries=nq, peak_mem=peak)
 
     # --------------------------------------------------------------- results
     def best(self, state: SieveState) -> Tuple[Array, Array, Array]:

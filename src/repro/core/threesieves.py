@@ -4,11 +4,16 @@ Two execution paths with *identical* semantics (tested bit-equal):
 
   * ``run``          — faithful per-item ``lax.scan`` (Algorithm 1 verbatim),
   * ``run_batched``  — TPU fast path: one fused gain matmul per state change
-                       plus closed-form rejection arithmetic (DESIGN.md §3).
+                       plus closed-form rejection arithmetic (DESIGN.md §4).
 
 The batched path exploits the paper's own premise — acceptances are rare —
 so the expected number of fused oracle passes per batch is
 1 + (#accepts in the batch).
+
+ThreeSieves keeps a single summary plus a rejection counter, so it
+specializes the shared sieve-family engine (``sieve_family.SieveAlgorithm``)
+rather than the stacked one: rung descent under rejection is closed-form
+((t + r) // T rungs for r rejections), not a per-instance axis.
 """
 from __future__ import annotations
 
@@ -18,8 +23,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .functions import LogDet, LogDetState
-from .thresholds import Ladder
+from .functions import LogDetState
+from .sieve_family import SieveAlgorithm, residual_threshold
 
 Array = jax.Array
 
@@ -34,21 +39,17 @@ class TSState:
 
 
 @dataclasses.dataclass(frozen=True)
-class ThreeSieves:
+class ThreeSieves(SieveAlgorithm):
     """ThreeSieves(K, T, eps) over the LogDet objective.
 
     ``T`` is the Rule-of-Three observation count: after T consecutive
     rejections the current threshold is discarded with confidence
-    p <= -ln(alpha)/T.
+    p <= -ln(alpha)/T.  Keyword-only: inheriting the family base reordered
+    the fields after ``f``, so positional (T, eps) calls must not compile.
     """
 
-    f: LogDet
-    T: int = 500
-    eps: float = 1e-3
-
-    @property
-    def ladder(self) -> Ladder:
-        return Ladder(eps=self.eps, m=self.f.singleton_value, K=self.f.K)
+    eps: float = dataclasses.field(default=1e-3, kw_only=True)
+    T: int = dataclasses.field(default=500, kw_only=True)
 
     @staticmethod
     def T_from_alpha_tau(alpha: float, tau: float) -> int:
@@ -64,8 +65,7 @@ class ThreeSieves:
 
     def _threshold(self, ld: LogDetState, j: Array) -> Array:
         v = self.ladder.value(j)
-        denom = jnp.maximum(self.f.K - ld.n, 1).astype(ld.fval.dtype)
-        return (v / 2.0 - ld.fval) / denom
+        return residual_threshold(v / 2.0, ld.fval, ld.n, self.f.K)
 
     # ------------------------------------------------------------- Algorithm 1
     def step(self, state: TSState, x: Array) -> TSState:
@@ -88,14 +88,6 @@ class ThreeSieves:
         t = jnp.where(accept, 0, t_rej)
         ld2 = dataclasses.replace(ld2, n_queries=ld.n_queries + 1)
         return TSState(ld=ld2, j=j, t=t, n_fused=state.n_fused)
-
-    def run(self, state: TSState, X: Array) -> TSState:
-        """Faithful scan over a chunk of the stream X (B, d)."""
-        def body(s, x):
-            return self.step(s, x), None
-
-        out, _ = jax.lax.scan(body, state, X)
-        return out
 
     # ---------------------------------------------------------- TPU fast path
     def run_batched(self, state: TSState, X: Array) -> TSState:
@@ -138,8 +130,7 @@ class ThreeSieves:
                 r = r_idx - cursor  # position within the remaining suffix
                 j_p = jnp.minimum(j + (t + r) // T, nr - 1)
                 v_p = self.ladder.value(j_p)
-                denom = jnp.maximum(f.K - ld.n, 1).astype(ld.fval.dtype)
-                thr_p = (v_p / 2.0 - ld.fval) / denom
+                thr_p = residual_threshold(v_p / 2.0, ld.fval, ld.n, f.K)
                 acc = (gains >= thr_p) & (r_idx >= cursor)
                 exists = jnp.any(acc)
                 istar = jnp.argmax(acc)  # first True

@@ -35,12 +35,14 @@ Array = jax.Array
 class CoresetSelector:
     def __init__(self, K: int, d: int, *, T: int = 1000, eps: float = 1e-3,
                  a: float = 1.0, lengthscale: Optional[float] = None,
-                 algorithm: str = "threesieves"):
+                 algorithm: str = "threesieves",
+                 backend: Optional[str] = None):
         self.algo = make(algorithm, K, d, a=a, lengthscale=lengthscale,
-                         eps=eps, T=T)
+                         eps=eps, T=T, backend=backend)
         self._state = self.algo.init()
-        runner = getattr(self.algo, "run_batched", None) or self.algo.run
-        self._run = jax.jit(runner)
+        # uniform protocol: every algorithm exposes run_batched (the sieve
+        # family as a fused fast path, the baselines as a run alias)
+        self._run = jax.jit(self.algo.run_batched)
         self._n_seen = 0
 
     # ------------------------------------------------------------------ api

@@ -3,8 +3,8 @@ hierarchical merge.
 
 The paper remarks that ThreeSieves instances can run in parallel; at
 production scale the stream is data-parallel (each DP shard sees 1/P of the
-items), so we run one local ThreeSieves per shard inside ``shard_map`` and
-periodically merge:
+items), so we run one local sieve-family algorithm per shard inside
+``shard_map`` and periodically merge:
 
     merge: all_gather the P local summaries (P*K candidate items, tiny —
     K vectors each) then re-run a sieve pass over the gathered candidates
@@ -14,6 +14,11 @@ periodically merge:
     (Mirzasoleiman et al., RandGreeDi lineage) — each local summary is a
     (1-eps)(1-1/e) summary of its shard w.h.p., and the merge pass loses at
     most another constant factor.
+
+Any algorithm exposing the uniform sieve-family protocol
+(``init/run_batched/summary`` plus the bound objective ``f``) plugs in:
+ThreeSieves, SieveStreaming(++), Salsa, or the baselines — the local phase
+calls ``run_batched`` and the merge consumes ``vmap(summary)``.
 
 Communication cost: P*K*d floats per merge — for P=32 shards, K=100, d=256
 that is 3.2 MB, once every ``merge_every`` chunks.  Compare against
@@ -26,25 +31,36 @@ SPMD program; the merge is one all_gather + a scan — no host round trips.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.functions import LogDet
-from repro.core.threesieves import ThreeSieves, TSState
+from repro.compat import shard_map
+from repro.core.functions import LogDetState
 
 Array = jax.Array
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MergedSummary:
+    """Result of a global merge: one LogDet summary over the pooled pools."""
+
+    ld: LogDetState
+
+
 @dataclasses.dataclass(frozen=True)
 class DistributedSummarizer:
-    """P parallel ThreeSieves over the 'data' axis of ``mesh`` + merge."""
+    """P parallel sieve instances over the 'data' axis of ``mesh`` + merge.
 
-    algo: ThreeSieves
+    ``algo`` is any sieve-family algorithm from ``repro.core.api.make``
+    (uniform ``init/run_batched/summary`` protocol, objective bound as
+    ``algo.f``).
+    """
+
+    algo: Any
     mesh: Mesh
     axis: str = "data"
 
@@ -53,7 +69,7 @@ class DistributedSummarizer:
         return self.mesh.shape[self.axis]
 
     # ----------------------------------------------------------------- local
-    def init(self) -> TSState:
+    def init(self):
         """Stacked per-shard states, sharded over the data axis."""
         P_ = self.n_shards
         one = self.algo.init()
@@ -63,10 +79,9 @@ class DistributedSummarizer:
         return jax.device_put(
             stacked, NamedSharding(self.mesh, spec))
 
-    def update(self, states: TSState, X: Array) -> TSState:
+    def update(self, states, X: Array):
         """X (P*B, d) global batch, sharded over 'data'.  Each shard's local
         sieve consumes its (B, d) slice — one SPMD program, no host sync."""
-        other = tuple(a for a in self.mesh.axis_names if a != self.axis)
 
         def local(st, x):
             st = jax.tree_util.tree_map(lambda l: l[0], st)
@@ -80,21 +95,22 @@ class DistributedSummarizer:
         return fn(states, X)
 
     # ----------------------------------------------------------------- merge
-    def merge(self, states: TSState) -> TSState:
+    def merge(self, states) -> MergedSummary:
         """Gather all local summaries and re-sieve into one global summary.
 
-        Returns a fresh global TSState (replicated) whose summary is the
-        merged selection.  Uses a *greedy threshold-free* pass over the
-        pooled candidates ordered by local fval (best shard first): each
-        candidate is accepted iff its marginal gain is at least the
-        SieveStreaming acceptance for the best local fval — equivalent to
-        one ThreeSieves pass with T=inf over a finite pool.
+        Returns a replicated ``MergedSummary`` holding the merged selection.
+        Uses a *greedy threshold-free* pass over the pooled candidates:
+        each round accepts the highest positive marginal gain — equivalent
+        to one ThreeSieves pass with T=inf over a finite pool.  The local
+        summaries are read through the uniform ``summary`` protocol
+        (vmapped over the shard axis), so any sieve-family algorithm's
+        states merge the same way.
         """
         f = self.algo.f
-        feats_all = states.ld.feats.reshape(-1, f.d)  # (P*K, d)
-        n_all = states.ld.n  # (P,)
         K = f.K
-        live = (jnp.arange(K)[None, :] < n_all[:, None]).reshape(-1)
+        feats_s, n_s, _ = jax.vmap(self.algo.summary)(states)  # (P,K,d),(P,)
+        feats_all = feats_s.reshape(-1, f.d)  # (P*K, d)
+        live = (jnp.arange(K)[None, :] < n_s[:, None]).reshape(-1)
 
         def round_(carry, _):
             ld, used = carry
@@ -109,9 +125,8 @@ class DistributedSummarizer:
         (ld, _), _ = jax.lax.scan(
             round_, (f.init(), jnp.zeros((feats_all.shape[0],), bool)),
             None, length=K)
-        z = jnp.zeros((), jnp.int32)
-        return TSState(ld=ld, j=z, t=z, n_fused=z)
+        return MergedSummary(ld=ld)
 
-    def global_summary(self, states: TSState) -> Tuple[Array, Array, Array]:
+    def global_summary(self, states) -> Tuple[Array, Array, Array]:
         merged = self.merge(states)
         return merged.ld.feats, merged.ld.n, merged.ld.fval

@@ -5,6 +5,7 @@ Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
 <name>/ref.py (pure-jnp oracle used by tests and the CPU path).
 """
 from .flash_attention import attention_ref, flash_attention
-from .rbf_gain import rbf_gain, rbf_gain_ref
+from .rbf_gain import fused_gains, gain_ref, rbf_gain, rbf_gain_ref
 
-__all__ = ["flash_attention", "attention_ref", "rbf_gain", "rbf_gain_ref"]
+__all__ = ["flash_attention", "attention_ref", "fused_gains", "gain_ref",
+           "rbf_gain", "rbf_gain_ref"]

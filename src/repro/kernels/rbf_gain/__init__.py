@@ -1,4 +1,6 @@
-from .ops import rbf_gain
-from .ref import rbf_gain_ref
+from .kernel import DEFAULT_BLOCK_B, KERNEL_KINDS, gain_pallas
+from .ops import fused_gains, rbf_gain
+from .ref import gain_ref, rbf_gain_ref
 
-__all__ = ["rbf_gain", "rbf_gain_ref"]
+__all__ = ["DEFAULT_BLOCK_B", "KERNEL_KINDS", "fused_gains", "gain_pallas",
+           "gain_ref", "rbf_gain", "rbf_gain_ref"]

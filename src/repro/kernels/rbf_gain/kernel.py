@@ -1,17 +1,21 @@
-"""Pallas TPU kernel: fused ThreeSieves marginal-gain evaluation.
+"""Pallas TPU kernel: fused marginal-gain evaluation for the sieve family.
 
 The single hot compute of the paper — for a candidate batch X (B, d) against
 the current summary (feats (K, d), Linv (K, K), live-row mask):
 
-    d2   = |x|^2 - 2 x feats^T + |feats|^2          (Bt, K)   squared dists
-    Km   = a * exp(-d2 / (2 l^2)) * mask            (Bt, K)   kernel block
+    Km   = a * k(x, feats) * mask                   (Bt, K)   kernel block
     C    = Km @ Linv^T                              (Bt, K)   whitened row
     gain = 1/2 * log((1+a) - |C|^2)                 (Bt,)
 
-Everything after the (Bt,d)x(d,K) distance matmul stays in VMEM — one HBM
-read of X per candidate, one scalar write.  The MXU sees two matmuls
-(x@feats^T and Km@Linv^T); K and d are padded to lane multiples (128) by the
-ops.py wrapper so both matmuls are hardware-aligned.
+where the kernel block dispatches on ``kind``:
+
+    rbf          exp(-|x - f|^2 / (2 l^2))   via the expanded-squared form
+    linear_norm  (x̂ · f̂ + 1) / 2            rows normalized in-kernel
+
+Everything after the (Bt,d)x(d,K) matmul stays in VMEM — one HBM read of X
+per candidate, one scalar write.  The MXU sees two matmuls (x@feats^T and
+Km@Linv^T); K and d are padded to lane multiples (128) by the ops.py wrapper
+so both matmuls are hardware-aligned.
 
 Grid: (B / BLOCK_B,) over candidates.  The summary operands (feats, Linv,
 mask — at most K=1024 rows) are small enough to live fully in VMEM and are
@@ -27,40 +31,58 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_B = 256
 
+KERNEL_KINDS = ("rbf", "linear_norm")
+
 
 def _gain_kernel(x_ref, feats_ref, linv_ref, mask_ref, out_ref, *,
-                 a: float, inv2l2: float):
+                 a: float, inv2l2: float, kind: str):
     x = x_ref[...]  # (Bt, d)
     feats = feats_ref[...]  # (K, d)
     linv = linv_ref[...]  # (K, K)
     mask = mask_ref[...]  # (1, K)
 
-    xn = jnp.sum(x * x, axis=-1, keepdims=True)  # (Bt, 1)
-    fn = jnp.sum(feats * feats, axis=-1)[None, :]  # (1, K)
-    xw = jnp.dot(x, feats.T, preferred_element_type=jnp.float32)  # MXU
-    d2 = jnp.maximum(xn + fn - 2.0 * xw, 0.0)
-    km = a * jnp.exp(-inv2l2 * d2) * mask  # (Bt, K)
+    if kind == "rbf":
+        xn = jnp.sum(x * x, axis=-1, keepdims=True)  # (Bt, 1)
+        fn = jnp.sum(feats * feats, axis=-1)[None, :]  # (1, K)
+        xw = jnp.dot(x, feats.T, preferred_element_type=jnp.float32)  # MXU
+        d2 = jnp.maximum(xn + fn - 2.0 * xw, 0.0)
+        kval = jnp.exp(-inv2l2 * d2)
+    elif kind == "linear_norm":
+        # zero-padded rows (both candidates and summary) normalize to zero,
+        # giving the raw value 0.5 — the mask zeroes dead summary columns.
+        xn = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+        fn = jnp.sqrt(jnp.sum(feats * feats, axis=-1, keepdims=True))
+        xs = x / jnp.maximum(xn, 1e-12)
+        fs = feats / jnp.maximum(fn, 1e-12)
+        xw = jnp.dot(xs, fs.T, preferred_element_type=jnp.float32)  # MXU
+        kval = 0.5 * (xw + 1.0)
+    else:  # pragma: no cover - static arg validated by the wrapper
+        raise ValueError(f"unknown kernel kind {kind!r}")
+
+    km = a * kval * mask  # (Bt, K)
     c = jnp.dot(km, linv.T, preferred_element_type=jnp.float32)  # MXU
     cn2 = jnp.sum(c * c, axis=-1, keepdims=True)  # (Bt, 1)
     out_ref[...] = 0.5 * jnp.log(jnp.maximum((1.0 + a) - cn2, 1e-12))
 
 
-@functools.partial(jax.jit, static_argnames=("a", "inv2l2", "block_b",
+@functools.partial(jax.jit, static_argnames=("a", "inv2l2", "kind", "block_b",
                                              "interpret"))
-def rbf_gain_pallas(x, feats, linv, mask, *, a: float, inv2l2: float,
-                    block_b: int = DEFAULT_BLOCK_B, interpret: bool = False):
+def gain_pallas(x, feats, linv, mask, *, a: float, inv2l2: float,
+                kind: str = "rbf", block_b: int = DEFAULT_BLOCK_B,
+                interpret: bool = False):
     """x (B, d), feats (K, d), linv (K, K), mask (1, K) -> gains (B, 1).
 
     B, K, d must already be padded (B % block_b == 0; K, d % 128 == 0 for
-    MXU alignment) — ``ops.rbf_gain`` does that.
+    MXU alignment) — ``ops.fused_gains`` does that.
     """
     B, d = x.shape
     K = feats.shape[0]
     assert B % block_b == 0, (B, block_b)
+    assert kind in KERNEL_KINDS, kind
     grid = (B // block_b,)
 
     return pl.pallas_call(
-        functools.partial(_gain_kernel, a=a, inv2l2=inv2l2),
+        functools.partial(_gain_kernel, a=a, inv2l2=inv2l2, kind=kind),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b, d), lambda i: (i, 0)),  # X: stream blocks
@@ -72,3 +94,10 @@ def rbf_gain_pallas(x, feats, linv, mask, *, a: float, inv2l2: float,
         out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
         interpret=interpret,
     )(x, feats, linv, mask)
+
+
+def rbf_gain_pallas(x, feats, linv, mask, *, a: float, inv2l2: float,
+                    block_b: int = DEFAULT_BLOCK_B, interpret: bool = False):
+    """Back-compat alias for the rbf-only entry point."""
+    return gain_pallas(x, feats, linv, mask, a=a, inv2l2=inv2l2, kind="rbf",
+                       block_b=block_b, interpret=interpret)

@@ -1,5 +1,11 @@
 """jit'd public wrapper: pad to hardware-aligned shapes, dispatch to the
-Pallas kernel on TPU (or interpret mode), else the jnp reference."""
+Pallas kernel on TPU (or interpret mode), else the jnp reference.
+
+``fused_gains`` is the canonical fused-oracle entry used by
+``repro.core.oracle.GainOracle``; it dispatches on the kernel ``kind``
+(``rbf`` | ``linear_norm``) so both paper kernels share the padded Pallas
+path.  ``rbf_gain`` is the historical rbf-only alias.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,8 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import DEFAULT_BLOCK_B, rbf_gain_pallas
-from .ref import rbf_gain_ref
+from .kernel import DEFAULT_BLOCK_B, gain_pallas
+from .ref import gain_ref
 
 
 def _pad_to(x, m, axis):
@@ -20,31 +26,49 @@ def _pad_to(x, m, axis):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("a", "inv2l2", "use_pallas",
-                                             "interpret", "block_b"))
-def rbf_gain(x, feats, linv, n, *, a: float, inv2l2: float,
-             use_pallas: bool = False, interpret: bool = False,
-             block_b: int = DEFAULT_BLOCK_B):
+def _round_up(n: int, m: int) -> int:
+    return n + (-n) % m
+
+
+@functools.partial(jax.jit, static_argnames=("a", "inv2l2", "kind",
+                                             "use_pallas", "interpret",
+                                             "block_b"))
+def fused_gains(x, feats, linv, n, *, a: float, inv2l2: float,
+                kind: str = "rbf", use_pallas: bool = False,
+                interpret: bool = False, block_b: int = DEFAULT_BLOCK_B):
     """Marginal gains of candidates ``x`` (B, d) against a summary.
 
     feats (K, d), linv (K, K), n () int32 live rows -> (B,) float32.
-    Public entry used by the data pipeline; selects Pallas vs reference.
+    Public entry used by the oracle backend; selects Pallas vs reference.
     """
     B = x.shape[0]
     K = feats.shape[0]
     mask = (jnp.arange(K) < n).astype(jnp.float32)[None, :]  # (1, K)
 
     if not (use_pallas or interpret):
-        return rbf_gain_ref(x, feats, linv, mask, a=a, inv2l2=inv2l2)[:, 0]
+        return gain_ref(x, feats, linv, mask, a=a, inv2l2=inv2l2,
+                        kind=kind)[:, 0]
 
-    # hardware alignment: lanes = 128, candidate blocks = block_b
-    bb = min(block_b, max(128, 1))
+    # hardware alignment: lanes = 128; candidate blocks honor the requested
+    # block_b but never exceed the (sublane-rounded) batch, so short tails
+    # pad to the next multiple of 8 rather than a full 128/256 block.
+    bb = min(block_b, _round_up(B, 8))
+    bb = max(8, bb - bb % 8)
     xp = _pad_to(_pad_to(x.astype(jnp.float32), 128, 1), bb, 0)
     featsp = _pad_to(_pad_to(feats.astype(jnp.float32), 128, 1), 128, 0)
     Kp = featsp.shape[0]
     linvp = jnp.zeros((Kp, Kp), jnp.float32).at[:K, :K].set(
         linv.astype(jnp.float32))
     maskp = _pad_to(mask, 128, 1)
-    out = rbf_gain_pallas(xp, featsp, linvp, maskp, a=a, inv2l2=inv2l2,
-                          block_b=bb, interpret=interpret)
+    out = gain_pallas(xp, featsp, linvp, maskp, a=a, inv2l2=inv2l2, kind=kind,
+                      block_b=bb, interpret=interpret)
     return out[:B, 0]
+
+
+def rbf_gain(x, feats, linv, n, *, a: float, inv2l2: float,
+             use_pallas: bool = False, interpret: bool = False,
+             block_b: int = DEFAULT_BLOCK_B):
+    """Back-compat alias for the rbf-only entry point."""
+    return fused_gains(x, feats, linv, n, a=a, inv2l2=inv2l2, kind="rbf",
+                       use_pallas=use_pallas, interpret=interpret,
+                       block_b=block_b)

@@ -1,15 +1,38 @@
-"""Pure-jnp oracle for the fused gain kernel (and the CPU execution path)."""
+"""Pure-jnp oracle for the fused gain kernel (and the CPU execution path).
+
+Dispatches on the kernel kind so both paper kernels (``rbf`` and
+``linear_norm``) share one reference implementation; must stay numerically
+aligned with ``repro.core.functions.KernelConfig.pairwise``.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def rbf_gain_ref(x, feats, linv, mask, *, a: float, inv2l2: float):
+def kernel_block(x, feats, *, inv2l2: float, kind: str = "rbf"):
+    """Unmasked kernel values k(x_i, feats_j): (B, d), (K, d) -> (B, K)."""
+    if kind == "rbf":
+        xn = jnp.sum(x * x, axis=-1, keepdims=True)
+        fn = jnp.sum(feats * feats, axis=-1)[None, :]
+        d2 = jnp.maximum(xn + fn - 2.0 * (x @ feats.T), 0.0)
+        return jnp.exp(-inv2l2 * d2)
+    if kind == "linear_norm":
+        xs = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+        fs = feats / jnp.maximum(
+            jnp.linalg.norm(feats, axis=-1, keepdims=True), 1e-12)
+        return 0.5 * (xs @ fs.T + 1.0)
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def gain_ref(x, feats, linv, mask, *, a: float, inv2l2: float,
+             kind: str = "rbf"):
     """x (B, d), feats (K, d), linv (K, K), mask (1, K) -> (B, 1) gains."""
-    xn = jnp.sum(x * x, axis=-1, keepdims=True)
-    fn = jnp.sum(feats * feats, axis=-1)[None, :]
-    d2 = jnp.maximum(xn + fn - 2.0 * (x @ feats.T), 0.0)
-    km = a * jnp.exp(-inv2l2 * d2) * mask
+    km = a * kernel_block(x, feats, inv2l2=inv2l2, kind=kind) * mask
     c = km @ linv.T
     cn2 = jnp.sum(c * c, axis=-1, keepdims=True)
     return 0.5 * jnp.log(jnp.maximum((1.0 + a) - cn2, 1e-12))
+
+
+def rbf_gain_ref(x, feats, linv, mask, *, a: float, inv2l2: float):
+    """Back-compat alias for the rbf-only entry point."""
+    return gain_ref(x, feats, linv, mask, a=a, inv2l2=inv2l2, kind="rbf")

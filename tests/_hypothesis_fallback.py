@@ -1,0 +1,88 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (see conftest.py).
+
+The container may not ship hypothesis; rather than skip the property tests,
+this fallback runs each ``@given`` test over a small deterministic sample:
+strategy bounds first (min/max for scalars, round-robin for sampled_from),
+then seeded pseudo-random draws, honoring ``settings(max_examples=...)``.
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``floats``, ``sampled_from``.  When the real package is installed the
+conftest shim never activates and this module is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng, i):
+        return self._draw(rng, i)
+
+
+def _integers(min_value, max_value):
+    def draw(rng, i):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rng.randint(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def _floats(min_value, max_value, **_kw):
+    def draw(rng, i):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rng.uniform(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def _sampled_from(elements):
+    seq = list(elements)
+
+    def draw(rng, i):
+        return seq[i % len(seq)] if i < len(seq) else rng.choice(seq)
+
+    return _Strategy(draw)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    integers = staticmethod(_integers)
+    floats = staticmethod(_floats)
+    sampled_from = staticmethod(_sampled_from)
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 10)
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for i in range(n):
+                vals = [s.example(rng, i) for s in strats]
+                fn(*args, *vals, **kwargs)
+
+        # pytest must not mistake the drawn parameters for fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

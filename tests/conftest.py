@@ -1,9 +1,25 @@
+import importlib.util
 import os
+import pathlib
+import sys
 
 # Smoke tests and benches must see exactly ONE device (the dry-run sets up
 # its 512 placeholder devices itself, in a subprocess / separate entrypoint).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+# Property tests use hypothesis when available; otherwise activate the
+# deterministic fallback sampler so the suite runs without the dependency.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_fallback",
+        pathlib.Path(__file__).parent / "_hypothesis_fallback.py")
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 import jax  # noqa: E402
 

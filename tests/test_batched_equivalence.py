@@ -1,0 +1,106 @@
+"""run vs run_batched equivalence for the whole algorithm family.
+
+The chunked fast paths must be *bit-equal* to the faithful per-item scans on
+the same stream — state, metrics and all — whether the stream arrives whole
+or in ragged chunks (ThreeSieves' own n_fused pass counter is the one
+metrics field `run` does not track)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SIEVE_FAMILY, make
+
+D, LS = 4, 1.5
+
+BATCHED_ALGOS = ["threesieves", "sievestreaming", "sievestreaming++", "salsa"]
+ALIAS_ALGOS = ["random", "independentsetimprovement", "preemptionstreaming",
+               "quickstream"]
+
+
+def _data(seed=0, n=300):
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(5, D) * 2.5
+    pts = centers[rng.randint(0, 5, n)] + 0.4 * rng.randn(n, D)
+    return jnp.asarray(pts.astype(np.float32))
+
+
+def _strip_n_fused(state):
+    if hasattr(state, "n_fused"):
+        return dataclasses.replace(state, n_fused=jnp.int32(0))
+    return state
+
+
+def _assert_states_equal(a, b):
+    a, b = _strip_n_fused(a), _strip_n_fused(b)
+    for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(a),
+                            jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"leaf {jax.tree_util.keystr(pa)} differs")
+
+
+def test_registry_names_the_sieve_family():
+    assert set(SIEVE_FAMILY) == set(BATCHED_ALGOS)
+
+
+@pytest.mark.parametrize("name", BATCHED_ALGOS)
+def test_run_batched_bit_equals_run(name):
+    X = _data(seed=1, n=300)
+    algo = make(name, K=8, d=D, lengthscale=LS, eps=0.1, T=40)
+    a = jax.jit(algo.run)(algo.init(), X)
+    b = jax.jit(algo.run_batched)(algo.init(), X)
+    _assert_states_equal(a, b)
+    # the batched path did select something on this clustered stream
+    _, n, fv = algo.summary(b)
+    assert int(n) > 0 and float(fv) > 0
+
+
+@pytest.mark.parametrize("name", BATCHED_ALGOS)
+def test_run_batched_chunked_bit_equals_run(name):
+    """Ragged chunk boundaries (the pipeline case) preserve semantics."""
+    X = _data(seed=2, n=260)
+    algo = make(name, K=7, d=D, lengthscale=LS, eps=0.05, T=30)
+    whole = jax.jit(algo.run)(algo.init(), X)
+    state = algo.init()
+    runb = jax.jit(algo.run_batched)
+    for lo, hi in [(0, 37), (37, 100), (100, 228), (228, 260)]:
+        state = runb(state, X[lo:hi])
+    _assert_states_equal(whole, state)
+
+
+@pytest.mark.parametrize("name", ALIAS_ALGOS)
+def test_uniform_protocol_alias(name):
+    """Baselines expose run_batched as an exact run alias."""
+    X = _data(seed=3, n=120)
+    algo = make(name, K=6, d=D, lengthscale=LS)
+    a = jax.jit(algo.run)(algo.init(), X)
+    b = jax.jit(algo.run_batched)(algo.init(), X)
+    _assert_states_equal(a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000),
+       st.sampled_from(["sievestreaming", "sievestreaming++", "salsa"]),
+       st.integers(40, 200))
+def test_stacked_batched_equals_scan_property(seed, name, n_items):
+    """Hypothesis sweep over streams for the stacked-sieve batched engine."""
+    X = _data(seed, n=n_items)
+    algo = make(name, K=5, d=D, lengthscale=LS, eps=0.2)
+    a = jax.jit(algo.run)(algo.init(), X)
+    b = jax.jit(algo.run_batched)(algo.init(), X)
+    _assert_states_equal(a, b)
+
+
+def test_batched_queries_and_memory_metrics():
+    """The closed-form rejection bookkeeping reproduces the paper metrics."""
+    X = _data(seed=4, n=200)
+    for name in ["sievestreaming", "salsa"]:
+        algo = make(name, K=8, d=D, lengthscale=LS, eps=0.1)
+        a = jax.jit(algo.run)(algo.init(), X)
+        b = jax.jit(algo.run_batched)(algo.init(), X)
+        assert int(a.n_queries) == int(b.n_queries)
+        assert int(algo.memory_elements(a)) == int(algo.memory_elements(b))

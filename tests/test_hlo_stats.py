@@ -32,8 +32,9 @@ def test_synthetic_counts():
 def test_real_lowered_psum():
     """An actual jax collective must be found in the compiled HLO."""
     mesh = jax.make_mesh((1,), ("x",))
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     def f(a):
         return jax.lax.psum(a, "x")
