@@ -3,7 +3,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify bench-oracle bench
+.PHONY: verify bench-oracle bench-serve bench
 
 # tier-1: the gate every PR must keep green
 verify:
@@ -12,6 +12,10 @@ verify:
 # GainOracle backend A/B sweep -> BENCH_oracle.json
 bench-oracle:
 	python -m benchmarks.kernel_bench --oracle-json BENCH_oracle.json
+
+# SummarizerPod throughput vs session count -> BENCH_serve.json
+bench-serve:
+	python -m benchmarks.serve_bench --smoke --json BENCH_serve.json
 
 # full benchmark harness (paper tables + kernels + roofline)
 bench:

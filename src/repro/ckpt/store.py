@@ -61,6 +61,7 @@ class CheckpointStore:
         self.root = Path(root)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._async_exc: Optional[BaseException] = None
         self.root.mkdir(parents=True, exist_ok=True)
 
     # ------------------------------------------------------------------ save
@@ -68,22 +69,43 @@ class CheckpointStore:
         return self.root / f"step_{step:09d}"
 
     def save(self, step: int, tree, extra: Optional[Dict] = None) -> Path:
-        """Synchronous save: gather to host, write leaves, commit-mark."""
+        """Synchronous save: gather to host, write leaves, commit-mark.
+
+        Joins (and re-raises any failure of) an in-flight async save
+        first — sync and async writes must never race on a step dir.
+        """
+        self.wait()
         host = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
         return self._write(step, host, extra or {})
 
     def save_async(self, step: int, tree, extra: Optional[Dict] = None):
-        """Snapshot to host now; write files on a daemon thread."""
+        """Snapshot to host now; write files on a daemon thread.
+
+        A failure of the in-flight write is never swallowed: it re-raises
+        from the next ``wait()`` — which this method calls first, so a
+        failed previous save surfaces here rather than looking committed.
+        """
         self.wait()
         host = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
-        self._thread = threading.Thread(
-            target=self._write, args=(step, host, extra or {}), daemon=True)
+
+        def _bg():
+            try:
+                self._write(step, host, extra or {})
+            except BaseException as e:  # surfaced by wait()
+                self._async_exc = e
+
+        self._thread = threading.Thread(target=_bg, daemon=True)
         self._thread.start()
 
     def wait(self):
+        """Join the in-flight async save; re-raise its failure, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._async_exc is not None:
+            exc, self._async_exc = self._async_exc, None
+            raise RuntimeError(
+                f"async checkpoint save to {self.root} failed") from exc
 
     def _write(self, step: int, host_tree, extra: Dict) -> Path:
         d = self._step_dir(step)

@@ -1,0 +1,23 @@
+"""Numerical constants shared across the core objective, the oracle
+backends, and the Pallas kernels.
+
+``GAIN_EPS`` is *the* clamp applied to the whitened residual
+``dd2 = (1 + a) - |c|^2`` before the log in every marginal-gain path
+(``LogDet.append``, the jnp oracle, the Pallas kernel and its interpret
+reference).  A near-saturated summary drives ``dd2`` toward 0; if the
+backends clamped at different epsilons their gains — and therefore the
+sieve accept decisions — could diverge right where the summaries matter
+most.  One constant, imported everywhere, keeps the accept decision
+bit-identical across backends (tested in tests/test_oracle.py).
+
+``NORM_EPS`` guards the row normalization of the ``linear_norm`` kernel
+(zero-padded rows normalize to zero instead of NaN) — likewise shared by
+every implementation of the kernel block.
+
+This module is dependency-free on purpose: it is imported from both
+``repro.core`` and ``repro.kernels`` and must never create an import
+cycle between them.
+"""
+
+GAIN_EPS = 1e-12
+NORM_EPS = 1e-12

@@ -41,6 +41,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.constants import GAIN_EPS, NORM_EPS
+
 Array = jax.Array
 
 # ---------------------------------------------------------------------------
@@ -69,8 +71,10 @@ class KernelConfig:
             return jnp.exp(-d2 / (2.0 * self.lengthscale**2))
         if self.kind == "linear_norm":
             # normalized linear kernel: <x, y> / (|x||y|)  in [-1, 1] -> [0,1]
-            xs = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
-            ys = y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), 1e-12)
+            xs = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True),
+                                 NORM_EPS)
+            ys = y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True),
+                                 NORM_EPS)
             return 0.5 * (xs @ ys.T + 1.0)
         raise ValueError(f"unknown kernel {self.kind}")
 
@@ -178,7 +182,7 @@ class LogDet:
         mask = self._mask(state)
         kx = self.kernel.pairwise(state.feats, x[None, :])[:, 0] * mask  # (K,)
         c = state.Linv @ (self.a * kx)  # (K,)
-        dd2 = jnp.maximum((1.0 + self.a) - jnp.sum(c * c), 1e-12)
+        dd2 = jnp.maximum((1.0 + self.a) - jnp.sum(c * c), GAIN_EPS)
         dd = jnp.sqrt(dd2)
         gain = 0.5 * jnp.log(dd2)
 

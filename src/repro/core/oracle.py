@@ -27,6 +27,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.constants import GAIN_EPS
 from repro.kernels.rbf_gain import DEFAULT_BLOCK_B, fused_gains
 
 from .functions import KernelConfig
@@ -101,7 +102,7 @@ class GainOracle:
             KX = self.kernel.pairwise(feats, X) * mask[:, None]  # (K, B)
             C = linv @ (self.a * KX)  # (K, B)
             cn2 = jnp.sum(C * C, axis=0)  # (B,)
-            dd2 = jnp.maximum((1.0 + self.a) - cn2, 1e-12)
+            dd2 = jnp.maximum((1.0 + self.a) - cn2, GAIN_EPS)
             return 0.5 * jnp.log(dd2)
         return fused_gains(
             X, feats, linv, n, a=self.a, inv2l2=self.inv2l2,

@@ -56,6 +56,21 @@ def stack_states(tree, n: int):
     )
 
 
+def tree_select(mask: Array, on_true, on_false):
+    """Per-row select between two stacked pytrees.
+
+    ``mask`` (n,) bool picks row i of ``on_true`` where True, of
+    ``on_false`` where False — the slot-reuse primitive of the session
+    engine (admit / evict / drift-reset touch only masked rows, so the
+    stacked state keeps one fixed shape and nothing recompiles).
+    """
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(mask.reshape(mask.shape + (1,) * (a.ndim - 1)),
+                               a, b),
+        on_true, on_false,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class SieveAlgorithm:
     """Base protocol: init / step / run / run_batched / summary.
@@ -78,19 +93,47 @@ class SieveAlgorithm:
     def step(self, state, x: Array):
         raise NotImplementedError
 
-    def run(self, state, X: Array):
-        """Faithful scan over a chunk of the stream X (B, d)."""
-        def body(s, x):
-            return self.step(s, x), None
+    def run(self, state, X: Array, n_valid: Array | None = None):
+        """Faithful scan over a chunk of the stream X (B, d).
 
-        out, _ = jax.lax.scan(body, state, X)
+        ``n_valid`` (dynamic, optional) restricts processing to the prefix
+        ``X[:n_valid]``; the padded tail leaves the state bit-untouched.
+        This is the ragged-chunk contract of the session engine: routing
+        scatters items to the *front* of fixed-shape per-session buffers,
+        so a prefix count is all the masking the algorithms ever need.
+        """
+        if n_valid is None:
+            def body(s, x):
+                return self.step(s, x), None
+
+            out, _ = jax.lax.scan(body, state, X)
+            return out
+
+        idx = jnp.arange(X.shape[0], dtype=jnp.int32)
+
+        def body(s, xi):
+            x, i = xi
+            s2 = self.step(s, x)
+            keep = i < n_valid
+            return jax.tree_util.tree_map(
+                lambda a, b: jnp.where(keep, a, b), s2, s), None
+
+        out, _ = jax.lax.scan(body, state, (X, idx))
         return out
 
-    def run_batched(self, state, X: Array):
+    def run_batched(self, state, X: Array, n_valid: Array | None = None):
         """Chunked fast path; default = ``run`` (always semantically equal)."""
-        return self.run(state, X)
+        return self.run(state, X, n_valid)
 
     def summary(self, state) -> Tuple[Array, Array, Array]:
+        raise NotImplementedError
+
+    def insertions(self, state) -> Array:
+        """Total summary insertions so far — () int32, *monotone* over the
+        stream.  The accept-activity metric of the session engine: unlike
+        ``summary()[1]`` (the winning instance's size, which can shrink
+        when the winner switches), this never decreases.
+        """
         raise NotImplementedError
 
 
@@ -130,6 +173,11 @@ class StackedSieve(SieveAlgorithm):
         """One fused oracle pass per instance, vmapped: (n_inst, B)."""
         return jax.vmap(lambda ld: self.f.gains(ld, X))(state.lds)
 
+    def insertions(self, state) -> Array:
+        """Insertions across ALL stacked instances (per-rung ``n`` only
+        ever grows, so the sum is monotone)."""
+        return jnp.sum(state.lds.n)
+
     # ------------------------------------------------------------------ step
     def step(self, state, x: Array):
         """Process one stream item across all instances (lockstep vmap)."""
@@ -138,7 +186,7 @@ class StackedSieve(SieveAlgorithm):
         return self._apply_item(state, x, takes)
 
     # ---------------------------------------------------------- TPU fast path
-    def run_batched(self, state, X: Array):
+    def run_batched(self, state, X: Array, n_valid: Array | None = None):
         """Semantically identical to ``run`` — one fused gains pass per
         state change.
 
@@ -149,13 +197,19 @@ class StackedSieve(SieveAlgorithm):
         pre-item state (exactly as in ``step``), the rejected prefix is
         folded into closed-form bookkeeping, and gains are recomputed only
         after the accept mutates the stacked summaries.
+
+        ``n_valid`` restricts processing to the prefix ``X[:n_valid]``
+        (see ``run``); gains beyond it are computed (fixed shapes) but can
+        never accept or count as rejections.
         """
         B = X.shape[0]
         idx = jnp.arange(B, dtype=jnp.int32)
+        nv = (jnp.int32(B) if n_valid is None
+              else jnp.clip(jnp.asarray(n_valid, jnp.int32), 0, B))
 
         def cond(carry):
             _, cursor = carry
-            return cursor < B
+            return cursor < nv
 
         def body(carry):
             st, cursor = carry
@@ -165,7 +219,7 @@ class StackedSieve(SieveAlgorithm):
             thr = self._thresholds(st)  # (n_inst,)
             can = self._can_accept(st)  # (n_inst,)
             acc = (gains >= thr[:, None]) & can[:, None]  # (n_inst, B)
-            acc_item = jnp.any(acc, axis=0) & (idx >= cursor)  # (B,)
+            acc_item = jnp.any(acc, axis=0) & (idx >= cursor) & (idx < nv)
             exists = jnp.any(acc_item)
             p = jnp.argmax(acc_item)  # first accepting item
 
@@ -175,8 +229,8 @@ class StackedSieve(SieveAlgorithm):
                 return st3, p + 1
 
             def on_no_accept():
-                st2 = self._bulk_reject(st, B - cursor)
-                return st2, jnp.int32(B)
+                st2 = self._bulk_reject(st, nv - cursor)
+                return st2, nv
 
             return jax.lax.cond(exists, on_accept, on_no_accept)
 

@@ -90,7 +90,8 @@ class ThreeSieves(SieveAlgorithm):
         return TSState(ld=ld2, j=j, t=t, n_fused=state.n_fused)
 
     # ---------------------------------------------------------- TPU fast path
-    def run_batched(self, state: TSState, X: Array) -> TSState:
+    def run_batched(self, state: TSState, X: Array,
+                    n_valid: Array | None = None) -> TSState:
         """Semantically identical to ``run`` — one fused gain pass per accept.
 
         Rejections are consumed in closed form:  processing r consecutive
@@ -98,10 +99,17 @@ class ThreeSieves(SieveAlgorithm):
         (t + r) // T and leaves the counter at (t + r) % T.  Thresholds seen
         by item p (given no earlier accept) are therefore computable for the
         whole batch at once from a single gains vector.
+
+        ``n_valid`` restricts processing to the prefix ``X[:n_valid]``
+        (the session engine's ragged-chunk contract, see
+        ``SieveAlgorithm.run``): the padded tail never accepts, never
+        counts as a rejection, and never advances the rung.
         """
         f, T, B = self.f, self.T, X.shape[0]
         nr = self.ladder.num_rungs
         r_idx = jnp.arange(B, dtype=jnp.int32)
+        nv = (jnp.int32(B) if n_valid is None
+              else jnp.clip(jnp.asarray(n_valid, jnp.int32), 0, B))
 
         def consume_all(j, t, steps):
             lowered = (t + steps) // T
@@ -109,7 +117,7 @@ class ThreeSieves(SieveAlgorithm):
 
         def cond(carry):
             _, _, _, cursor, _, _, _ = carry
-            return cursor < B
+            return cursor < nv
 
         def body(carry):
             ld, j, t, cursor, gains, valid, n_fused = carry
@@ -122,8 +130,8 @@ class ThreeSieves(SieveAlgorithm):
 
             # -- full summary: everything left is a rejection --------------
             def when_full():
-                j2, t2 = consume_all(j, t, B - cursor)
-                return ld, j2, t2, jnp.int32(B), gains, True, n_fused
+                j2, t2 = consume_all(j, t, nv - cursor)
+                return ld, j2, t2, nv, gains, True, n_fused
 
             # -- live summary: find the first acceptor ----------------------
             def when_live():
@@ -131,7 +139,7 @@ class ThreeSieves(SieveAlgorithm):
                 j_p = jnp.minimum(j + (t + r) // T, nr - 1)
                 v_p = self.ladder.value(j_p)
                 thr_p = residual_threshold(v_p / 2.0, ld.fval, ld.n, f.K)
-                acc = (gains >= thr_p) & (r_idx >= cursor)
+                acc = (gains >= thr_p) & (r_idx >= cursor) & (r_idx < nv)
                 exists = jnp.any(acc)
                 istar = jnp.argmax(acc)  # first True
 
@@ -143,25 +151,30 @@ class ThreeSieves(SieveAlgorithm):
                             gains, False, n_fused)
 
                 def on_no_accept():
-                    j2, t2 = consume_all(j, t, B - cursor)
-                    return ld, j2, t2, jnp.int32(B), gains, True, n_fused
+                    j2, t2 = consume_all(j, t, nv - cursor)
+                    return ld, j2, t2, nv, gains, True, n_fused
 
                 return jax.lax.cond(exists, on_accept, on_no_accept)
 
             return jax.lax.cond(ld.n >= f.K, when_full, when_live)
 
-        gains0 = jnp.zeros((B,), jnp.float32)
+        # the gains carry must match the oracle's output dtype — a f32
+        # literal here crashed the while-loop for LogDet(dtype=bf16)
+        gains0 = jnp.zeros((B,), f.dtype)
         ld, j, t, _, _, _, n_fused = jax.lax.while_loop(
             cond, body,
             (state.ld, state.j, state.t, jnp.int32(0), gains0, False,
              state.n_fused),
         )
-        ld = dataclasses.replace(ld, n_queries=ld.n_queries + B)
+        ld = dataclasses.replace(ld, n_queries=ld.n_queries + nv)
         return TSState(ld=ld, j=j, t=t, n_fused=n_fused)
 
     # ---------------------------------------------------------------- metrics
     def summary(self, state: TSState) -> Tuple[Array, Array, Array]:
         return state.ld.feats, state.ld.n, state.ld.fval
+
+    def insertions(self, state: TSState) -> Array:
+        return state.ld.n  # single append-only summary
 
     def memory_elements(self, state: TSState) -> int:
         return self.f.K  # a single summary — the paper's O(K)

@@ -2,8 +2,9 @@
 from .coreset import CoresetSelector
 from .distributed import DistributedSummarizer
 from .streams import (MixtureSpec, TokenStreamSpec, deterministic_batch_fn,
-                      drifting_mixture, gaussian_mixture, token_stream)
+                      drifting_mixture, gaussian_mixture, session_stream,
+                      token_stream)
 
 __all__ = ["CoresetSelector", "DistributedSummarizer", "MixtureSpec",
            "TokenStreamSpec", "deterministic_batch_fn", "drifting_mixture",
-           "gaussian_mixture", "token_stream"]
+           "gaussian_mixture", "session_stream", "token_stream"]

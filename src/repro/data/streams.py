@@ -10,7 +10,11 @@ streaming experiments.  These generators reproduce those regimes:
   * ``drifting_mixture``   — mixture components move / appear over time
                              (stream51 regime: new classes enter the stream),
   * ``token_stream``       — synthetic LM token batches with embeddings
-                             (the coreset-selection integration path).
+                             (the coreset-selection integration path),
+  * ``session_stream``     — a *tagged* multi-tenant ingest queue
+                             ``(session_id, x)``: many small per-session
+                             streams interleaved into one batch feed (the
+                             SummarizerPod serving regime).
 
 Everything is deterministic in the seed and generated in device-resident
 chunks (no host round-trips inside the consumer loop).
@@ -130,6 +134,41 @@ def token_stream(seed: int, spec: TokenStreamSpec
         hist /= hist.sum(-1, keepdims=True)
         embeds = jnp.asarray(hist @ proj)
         yield batch, embeds
+
+
+def session_stream(seed: int, spec: MixtureSpec, n_sessions: int,
+                   batch: int, *, drift_per_batch: float = 0.0,
+                   session_ids: Optional[np.ndarray] = None
+                   ) -> Iterator[Tuple[Array, Array]]:
+    """Tagged multi-tenant ingest queue for the SummarizerPod.
+
+    Yields ``(sids (batch,) int32, X (batch, d) float32)``: every item is
+    tagged with the session it belongs to, sessions are interleaved
+    uniformly at random (the arrival pattern of many independent
+    tenants), and each session draws from its *own* mixture — per-tenant
+    distributions, optionally drifting per batch.  ``session_ids``
+    overrides the default ids ``0..n_sessions-1`` (e.g. the external ids
+    a service admitted).
+    """
+    rng = np.random.default_rng(seed)
+    ids = (np.arange(n_sessions, dtype=np.int32)
+           if session_ids is None
+           else np.asarray(session_ids, np.int32))
+    if len(ids) != n_sessions:
+        raise ValueError(
+            f"session_ids has {len(ids)} entries for {n_sessions} sessions")
+    # (n_sessions, n_components, d) — a private mixture per tenant
+    means = spec.spread * rng.normal(
+        0, 1.0, (n_sessions, spec.n_components, spec.d)).astype(np.float32)
+    while True:
+        sess = rng.integers(0, n_sessions, batch)
+        comp = rng.integers(0, spec.n_components, batch)
+        x = means[sess, comp] + spec.noise * rng.normal(
+            0, 1.0, (batch, spec.d)).astype(np.float32)
+        yield jnp.asarray(ids[sess]), jnp.asarray(x.astype(np.float32))
+        if drift_per_batch:
+            means = means + drift_per_batch * rng.normal(
+                0, 1.0, means.shape).astype(np.float32)
 
 
 def deterministic_batch_fn(seed: int, spec: TokenStreamSpec):

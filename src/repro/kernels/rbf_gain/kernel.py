@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.constants import GAIN_EPS, NORM_EPS
+
 DEFAULT_BLOCK_B = 256
 
 KERNEL_KINDS = ("rbf", "linear_norm")
@@ -52,8 +54,8 @@ def _gain_kernel(x_ref, feats_ref, linv_ref, mask_ref, out_ref, *,
         # giving the raw value 0.5 — the mask zeroes dead summary columns.
         xn = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
         fn = jnp.sqrt(jnp.sum(feats * feats, axis=-1, keepdims=True))
-        xs = x / jnp.maximum(xn, 1e-12)
-        fs = feats / jnp.maximum(fn, 1e-12)
+        xs = x / jnp.maximum(xn, NORM_EPS)
+        fs = feats / jnp.maximum(fn, NORM_EPS)
         xw = jnp.dot(xs, fs.T, preferred_element_type=jnp.float32)  # MXU
         kval = 0.5 * (xw + 1.0)
     else:  # pragma: no cover - static arg validated by the wrapper
@@ -62,7 +64,7 @@ def _gain_kernel(x_ref, feats_ref, linv_ref, mask_ref, out_ref, *,
     km = a * kval * mask  # (Bt, K)
     c = jnp.dot(km, linv.T, preferred_element_type=jnp.float32)  # MXU
     cn2 = jnp.sum(c * c, axis=-1, keepdims=True)  # (Bt, 1)
-    out_ref[...] = 0.5 * jnp.log(jnp.maximum((1.0 + a) - cn2, 1e-12))
+    out_ref[...] = 0.5 * jnp.log(jnp.maximum((1.0 + a) - cn2, GAIN_EPS))
 
 
 @functools.partial(jax.jit, static_argnames=("a", "inv2l2", "kind", "block_b",

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.constants import GAIN_EPS, NORM_EPS
+
 
 def kernel_block(x, feats, *, inv2l2: float, kind: str = "rbf"):
     """Unmasked kernel values k(x_i, feats_j): (B, d), (K, d) -> (B, K)."""
@@ -17,9 +19,10 @@ def kernel_block(x, feats, *, inv2l2: float, kind: str = "rbf"):
         d2 = jnp.maximum(xn + fn - 2.0 * (x @ feats.T), 0.0)
         return jnp.exp(-inv2l2 * d2)
     if kind == "linear_norm":
-        xs = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+        xs = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True),
+                             NORM_EPS)
         fs = feats / jnp.maximum(
-            jnp.linalg.norm(feats, axis=-1, keepdims=True), 1e-12)
+            jnp.linalg.norm(feats, axis=-1, keepdims=True), NORM_EPS)
         return 0.5 * (xs @ fs.T + 1.0)
     raise ValueError(f"unknown kernel kind {kind!r}")
 
@@ -30,7 +33,7 @@ def gain_ref(x, feats, linv, mask, *, a: float, inv2l2: float,
     km = a * kernel_block(x, feats, inv2l2=inv2l2, kind=kind) * mask
     c = km @ linv.T
     cn2 = jnp.sum(c * c, axis=-1, keepdims=True)
-    return 0.5 * jnp.log(jnp.maximum((1.0 + a) - cn2, 1e-12))
+    return 0.5 * jnp.log(jnp.maximum((1.0 + a) - cn2, GAIN_EPS))
 
 
 def rbf_gain_ref(x, feats, linv, mask, *, a: float, inv2l2: float):

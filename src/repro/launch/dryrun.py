@@ -369,6 +369,115 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
     return result
 
 
+def run_summarizer_pod_cell(multi_pod: bool, out_dir: Path, *,
+                            sessions_per_shard: int = 16, chunk: int = 1024,
+                            K: int = 100, d: int = 256) -> dict:
+    """The ``paper-summarizer__pod*`` cell: the SummarizerPod's real
+    lowered program on the production mesh.
+
+    One SPMD program hosts P x S summarizer sessions (P = 'data'-axis
+    shards, S slots each): the shard-mapped ``ingest`` routes a global
+    tagged queue to per-session chunk buffers and advances every session
+    via the vmapped fused ``run_batched``.  We record compile success,
+    cost/memory analysis and collective traffic for the hot path
+    (ingest) and the periodic per-session ``readout``, plus the
+    two-round distributed merge (``DistributedSummarizer``) that pools
+    session summaries into one global summary.
+    """
+    from repro.core.api import make
+    from repro.data import DistributedSummarizer
+    from repro.serve.summarize import SummarizerPod
+
+    mesh_name = "pod512" if multi_pod else "pod256"
+    cell_id = f"paper-summarizer__{mesh_name}"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # sessions shard over every data-parallel axis — on the multi-pod mesh
+    # that is ('pod', 'data'), doubling the tenant count, not replicating
+    # the same 256 sessions per pod
+    axes = ("pod", "data") if multi_pod else ("data",)
+    P_shards = 1
+    for ax in axes:
+        P_shards *= mesh.shape[ax]
+    S_tot = P_shards * sessions_per_shard
+    N_tot = S_tot * chunk  # every session can fill its routing capacity
+
+    algo = make("threesieves", K=K, d=d, T=5000, eps=1e-3)
+    pod = SummarizerPod(algo=algo, sessions=sessions_per_shard, chunk=chunk)
+    pod_global = dataclasses.replace(pod, sessions=S_tot)
+
+    state = jax.eval_shape(pod_global.init)
+    sids = jax.ShapeDtypeStruct((N_tot,), jnp.int32)
+    X = jax.ShapeDtypeStruct((N_tot, d), jnp.float32)
+    data_sh = NamedSharding(mesh, P(axes))
+    st_sh = jax.tree_util.tree_map(lambda _: data_sh, state)
+    stats_sh = {"counts": data_sh, "dropped_unknown": data_sh,
+                "dropped_overflow": data_sh}
+
+    try:
+        with mesh:
+            upd = jax.jit(pod.make_sharded_update(mesh, axis=axes),
+                          in_shardings=(st_sh, data_sh, data_sh),
+                          out_shardings=(st_sh, stats_sh))
+            t0 = time.time()
+            lowered = upd.lower(state, sids, X)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            cost = _cost_dict(compiled)
+            coll = collective_stats(compiled.as_text())
+            res_u = {
+                "flops": cost.get("flops", 0.0),
+                "bytes": cost.get("bytes accessed", 0.0),
+                "collective_bytes": coll.total_bytes,
+                "mem": _mem_dict(compiled),
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+            }
+
+            ro = jax.jit(pod_global.readout, in_shardings=(st_sh,))
+            c_ro = ro.lower(state).compile()
+            cost_ro = _cost_dict(c_ro)
+            res_r = {"flops": cost_ro.get("flops", 0.0),
+                     "bytes": cost_ro.get("bytes accessed", 0.0),
+                     "collective_bytes":
+                         collective_stats(c_ro.as_text()).total_bytes}
+
+            # periodic two-round merge over pooled local summaries (the
+            # DistributedSummarizer runs over the 'data' axis only)
+            dist = DistributedSummarizer(algo=algo, mesh=mesh)
+            dstates = jax.eval_shape(dist.init)
+            d_sh = jax.tree_util.tree_map(
+                lambda _: NamedSharding(mesh, P("data")), dstates)
+            c_m = jax.jit(dist.merge, in_shardings=(d_sh,)).lower(
+                dstates).compile()
+            cost_m = _cost_dict(c_m)
+            res_m = {"flops": cost_m.get("flops", 0.0),
+                     "bytes": cost_m.get("bytes accessed", 0.0),
+                     "collective_bytes":
+                         collective_stats(c_m.as_text()).total_bytes}
+        result = {
+            "cell": cell_id, "ok": True,
+            "K": K, "d": d, "sessions_per_shard": sessions_per_shard,
+            "shards": P_shards, "total_sessions": S_tot,
+            "chunk_per_session": chunk, "items_per_ingest": N_tot,
+            "mesh": dict(mesh.shape),
+            "pod_ingest": res_u, "readout": res_r, "merge": res_m,
+        }
+    except Exception as e:
+        result = {"cell": cell_id, "ok": False,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-3000:]}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(result, indent=1))
+    status = "OK " if result["ok"] else "FAIL"
+    print(f"[{status}] {cell_id}  "
+          + (f"{S_tot} sessions, ingest flops/shard="
+             f"{result['pod_ingest']['flops']:.2e} "
+             f"coll={result['pod_ingest']['collective_bytes']:.2e}"
+             if result["ok"] else result["error"]))
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -386,6 +495,16 @@ def main():
                     choices=["production", "fd"],
                     help="fd = finite-difference unrolled roofline pass")
     args = ap.parse_args()
+
+    if args.arch == "paper-summarizer":
+        # the SummarizerPod session-engine cells (no model arch involved)
+        out_dir = Path(args.out)
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        n_fail = sum(0 if run_summarizer_pod_cell(mp, out_dir)["ok"] else 1
+                     for mp in meshes)
+        print(f"done; {n_fail} failures")
+        raise SystemExit(1 if n_fail else 0)
 
     archs = all_archs() if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]

@@ -1,4 +1,7 @@
-"""repro.serve — batched prefill/decode serving."""
+"""repro.serve — batched prefill/decode serving and the multi-tenant
+summarization session engine."""
 from .engine import ServeDriver, make_decode_step, make_prefill_step
+from .summarize import PodState, SummarizerPod
 
-__all__ = ["ServeDriver", "make_decode_step", "make_prefill_step"]
+__all__ = ["ServeDriver", "make_decode_step", "make_prefill_step",
+           "PodState", "SummarizerPod"]

@@ -65,11 +65,24 @@ class ServeDriver:
 
     def generate(self, params, prompts: Array, n_new: int,
                  frontend: Optional[Dict[str, Array]] = None) -> Array:
-        """prompts (B, P) int32 -> (B, P + n_new) int32 (greedy)."""
+        """prompts (B, P) int32 -> (B, P + n_new) int32 (greedy).
+
+        B may be smaller than the compiled slot count (partial admission —
+        the normal serving case): short batches are zero-padded up to
+        ``self.batch`` so the jitted steps never retrace, and the padded
+        rows are dropped from the output.
+        """
         cfg = self.model.cfg
         B, P = prompts.shape
-        assert B == self.batch
-        caches = init_cache(cfg, B, self.max_seq)
+        if B > self.batch:
+            raise ValueError(
+                f"batch {B} exceeds the compiled slot count {self.batch}")
+        pad = self.batch - B
+        if pad:
+            prompts = _pad_rows(prompts, pad)
+            frontend = {k: _pad_rows(v, pad)
+                        for k, v in (frontend or {}).items()} or None
+        caches = init_cache(cfg, self.batch, self.max_seq)
         batch = {"tokens": prompts, **(frontend or {})}
         logits, caches, enc_out = self._prefill(params, batch, caches)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
@@ -80,4 +93,10 @@ class ServeDriver:
             tok, _, caches = self._decode(params, tok, caches,
                                           jnp.int32(pos0 + i), enc_out)
             out.append(tok)
-        return jnp.concatenate(out, axis=1)
+        return jnp.concatenate(out, axis=1)[:B]
+
+
+def _pad_rows(x: Array, pad: int) -> Array:
+    """Zero-pad the leading (batch) axis by ``pad`` rows."""
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths)

@@ -1,0 +1,308 @@
+"""SummarizerPod: a multi-tenant streaming-summarization session engine.
+
+The paper summarizes one stream on a fixed memory budget; the service
+scenario is *many small tenants* — S independent summarizer sessions
+(one per user/document/conversation), each tiny, none worth its own
+dispatch.  The pod hosts all of them as ONE stacked, device-resident
+state pytree and advances every session inside a single jitted SPMD
+program:
+
+  * state     — ``stack_states(algo.init(), S)`` plus per-slot metadata
+                (session id, liveness, item/accept counters, drift
+                window), every leaf with a leading (S,) session axis;
+  * ingest    — a tagged queue ``(session_id, x)`` is routed to
+                fixed-shape per-session chunk buffers with one scatter
+                (stable-sort + searchsorted positions, no host loop),
+                then ``vmap(algo.run_batched)`` over the session axis
+                prices and updates all sessions at once — the fused
+                fast path of DESIGN.md §4, batched once more;
+  * lifecycle — admit into a free slot, evict, and drift-triggered
+                reset all reuse slots via masked row-selects
+                (``tree_select``), so the compiled program never sees a
+                shape change and nothing retraces;
+  * scale-out — ``make_sharded_update`` shard_maps the same program
+                over the mesh 'data' axis: P shards x S slots = P*S
+                sessions per pod, still one SPMD program (the dry-run
+                cells ``paper-summarizer__pod*`` lower exactly this);
+  * fault tol — the whole pod state is one pytree, so
+                ``ckpt.CheckpointStore`` checkpoints it mid-stream and
+                restores it elastically onto any mesh shape.
+
+Semantics: each session is bit-equal to running its algorithm standalone
+via ``run_batched`` on the items routed to it (tested in
+tests/test_summarizer_pod.py) — the pod is purely an execution strategy.
+
+``algo`` must be a sieve-family algorithm (uniform
+``init/run_batched(state, X, n_valid)/summary/insertions`` protocol,
+objective bound as ``algo.f``): ThreeSieves (default and cheapest — one
+summary per session), SieveStreaming(++), or Salsa.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sieve_family import stack_states, tree_select
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PodState:
+    """Stacked state of S summarizer sessions; every leaf is (S, ...)."""
+
+    algo: Any  # stacked algorithm state (leading session axis)
+    sid: Array  # (S,) int32 — session id occupying the slot, -1 when free
+    active: Array  # (S,) bool — slot hosts a live session
+    items: Array  # (S,) int32 — items routed since admission
+    accepts: Array  # (S,) int32 — summary insertions since admission
+    win_items: Array  # (S,) int32 — items since the last drift check/reset
+    win_accepts: Array  # (S,) int32 — accepts since the last check/reset
+    resets: Array  # (S,) int32 — drift resets performed on the slot
+
+    @property
+    def S(self) -> int:
+        return self.sid.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class SummarizerPod:
+    """S summarizer sessions as one stacked state + one jitted program.
+
+    ``chunk`` is the per-session routing capacity of a single ingest
+    call: an ingest batch may carry at most ``chunk`` items per session
+    (the tail is counted as dropped — size the ingest batches so this
+    never triggers, exactly like a serving queue's admission bound).
+    """
+
+    algo: Any
+    sessions: int
+    chunk: int
+
+    # ------------------------------------------------------------------ state
+    def init(self) -> PodState:
+        S = self.sessions
+        zi = jnp.zeros((S,), jnp.int32)
+        return PodState(
+            algo=stack_states(self.algo.init(), S),
+            sid=jnp.full((S,), -1, jnp.int32),
+            active=jnp.zeros((S,), bool),
+            items=zi, accepts=zi, win_items=zi, win_accepts=zi, resets=zi,
+        )
+
+    def abstract_state(self) -> PodState:
+        """ShapeDtypeStruct pytree — the ``like`` donor for restore."""
+        return jax.eval_shape(self.init)
+
+    def _insertions(self, state: PodState) -> Array:
+        """(S,) per-session summary insertions — monotone accept metric.
+
+        Deliberately NOT ``summary()[1]``: for multi-rung algorithms the
+        winning rung can switch to a smaller summary, and a shrinking
+        counter would corrupt the lifetime accepts and fire spurious
+        drift resets.
+        """
+        return jax.vmap(self.algo.insertions)(state.algo)
+
+    # -------------------------------------------------------------- lifecycle
+    def admit(self, state: PodState, session_id: Array
+              ) -> Tuple[PodState, Array, Array]:
+        """Admit a session into the first free slot.
+
+        -> (state, slot, ok).  ``ok`` False when the pod is full (state
+        unchanged).  Idempotent: re-admitting a live session id (a retry
+        after a lost ack, a racing front-end) returns its existing slot
+        untouched instead of occupying a phantom second slot that
+        ``route`` would never feed and ``evict`` would free together
+        with the real one.  Otherwise the slot's algorithm state is
+        re-initialized, so a recycled slot starts fresh — no recompile,
+        just a masked select.
+        """
+        sess = jnp.asarray(session_id, jnp.int32)
+        existing = state.active & (state.sid == sess)
+        present = jnp.any(existing)
+        free = ~state.active
+        # negative ids are reserved (-1 marks free slots and queue
+        # padding); admitting one would route every padding item into it
+        ok = (sess >= 0) & (present | jnp.any(free))
+        slot = jnp.where(present, jnp.argmax(existing), jnp.argmax(free))
+        hot = (jnp.arange(self.sessions) == slot) & ok & ~present
+        z = jnp.zeros((self.sessions,), jnp.int32)
+        state = dataclasses.replace(
+            state,
+            algo=tree_select(hot, stack_states(self.algo.init(),
+                                               self.sessions), state.algo),
+            sid=jnp.where(hot, jnp.asarray(session_id, jnp.int32), state.sid),
+            active=state.active | hot,
+            items=jnp.where(hot, z, state.items),
+            accepts=jnp.where(hot, z, state.accepts),
+            win_items=jnp.where(hot, z, state.win_items),
+            win_accepts=jnp.where(hot, z, state.win_accepts),
+            resets=jnp.where(hot, z, state.resets),
+        )
+        return state, slot, ok
+
+    def evict(self, state: PodState, session_id: Array) -> PodState:
+        """Free the slot hosting ``session_id`` (no-op when absent)."""
+        gone = state.active & (state.sid == jnp.asarray(session_id, jnp.int32))
+        return dataclasses.replace(
+            state,
+            active=state.active & ~gone,
+            sid=jnp.where(gone, -1, state.sid),
+        )
+
+    def reset_slots(self, state: PodState, mask: Array) -> PodState:
+        """Drift reset: re-arm the masked sessions' summaries in place.
+
+        The session keeps its slot, id and lifetime counters; only the
+        algorithm state and the drift window restart (the paper's §3
+        re-selection policy, per tenant).
+        """
+        mask = mask & state.active
+        z = jnp.zeros((self.sessions,), jnp.int32)
+        return dataclasses.replace(
+            state,
+            algo=tree_select(mask, stack_states(self.algo.init(),
+                                                self.sessions), state.algo),
+            win_items=jnp.where(mask, z, state.win_items),
+            win_accepts=jnp.where(mask, z, state.win_accepts),
+            resets=state.resets + mask.astype(jnp.int32),
+        )
+
+    def drift_check(self, state: PodState, *, min_items: int,
+                    min_rate: float) -> Tuple[PodState, Array]:
+        """Reset sessions whose windowed accept rate collapsed.
+
+        A session that has routed >= ``min_items`` since its last window
+        and accepted at a rate < ``min_rate`` is assumed drifted (its
+        summary saturated on a stale distribution) and is re-armed.
+        -> (state, reset_mask).
+        """
+        rate = (state.win_accepts.astype(jnp.float32)
+                / jnp.maximum(state.win_items, 1).astype(jnp.float32))
+        mask = state.active & (state.win_items >= min_items) \
+            & (rate < min_rate)
+        return self.reset_slots(state, mask), mask
+
+    # ---------------------------------------------------------------- routing
+    def route(self, state: PodState, sids: Array, X: Array
+              ) -> Tuple[Array, Array, Array, Array]:
+        """Scatter a tagged ingest batch to per-session chunk buffers.
+
+        sids (N,) int32 session ids (-1 = queue padding), X (N, d)
+        -> (chunks (S, C, d), counts (S,), unknown (), overflow ()).
+
+        Fixed-shape throughout: each item resolves to its slot (items
+        with no live session fall into a trash row), takes the next
+        position in that slot's buffer (stable sort + searchsorted — no
+        O(N^2) pairwise ranks), and one scatter writes all of them.
+        The two drop causes are counted separately: ``unknown`` (no live
+        session — a front-end routing error, lost tenant data) vs
+        ``overflow`` (beyond a slot's C capacity — benign backpressure,
+        size the ingest batches).  Folding them together would hide the
+        first behind the second.
+        """
+        S, C = self.sessions, self.chunk
+        N = sids.shape[0]
+        match = (sids[:, None] == state.sid[None, :]) & state.active[None, :]
+        found = jnp.any(match, axis=1)
+        slot = jnp.where(found, jnp.argmax(match, axis=1), S)  # S = trash
+
+        order = jnp.argsort(slot)  # stable: preserves stream order per slot
+        sorted_slot = slot[order]
+        seg_start = jnp.searchsorted(sorted_slot, sorted_slot, side="left")
+        pos_sorted = (jnp.arange(N, dtype=jnp.int32)
+                      - seg_start.astype(jnp.int32))
+        pos = jnp.zeros((N,), jnp.int32).at[order].set(pos_sorted)
+
+        keep = found & (pos < C)
+        slot_f = jnp.where(keep, slot, S)
+        pos_f = jnp.minimum(pos, C - 1)
+        chunks = jnp.zeros((S + 1, C) + X.shape[1:], X.dtype)
+        chunks = chunks.at[slot_f, pos_f].set(X)[:S]
+        counts = jnp.bincount(slot_f, length=S).astype(jnp.int32)
+        # (bincount drops the out-of-range trash index S — no (N, S)
+        # equality matrix on the hot path)
+        unknown = jnp.sum(~found & (sids >= 0)).astype(jnp.int32)
+        overflow = jnp.sum(found & (pos >= C)).astype(jnp.int32)
+        return chunks, counts, unknown, overflow
+
+    # ----------------------------------------------------------------- ingest
+    def ingest(self, state: PodState, sids: Array, X: Array
+               ) -> Tuple[PodState, Dict[str, Array]]:
+        """Route one tagged batch and advance every session — the hot path.
+
+        One routing scatter + one vmapped ``run_batched`` over the
+        session axis: a single fused program for the whole pod, whatever
+        mix of sessions the batch addresses.
+        """
+        chunks, counts, unknown, overflow = self.route(state, sids, X)
+        n_before = self._insertions(state)
+        algo2 = jax.vmap(self.algo.run_batched)(state.algo, chunks, counts)
+        state2 = dataclasses.replace(state, algo=algo2)
+        acc = self._insertions(state2) - n_before  # (S,) this batch
+        state2 = dataclasses.replace(
+            state2,
+            items=state.items + counts,
+            accepts=state.accepts + acc,
+            win_items=state.win_items + counts,
+            win_accepts=state.win_accepts + acc,
+        )
+        return state2, {"counts": counts,
+                        "dropped_unknown": unknown[None],
+                        "dropped_overflow": overflow[None]}
+
+    # ---------------------------------------------------------------- readout
+    def readout(self, state: PodState
+                ) -> Tuple[Array, Array, Array, Array]:
+        """Periodic per-session summaries: (feats (S, K, d), n (S,),
+        fval (S,), active (S,))."""
+        feats, n, fval = jax.vmap(self.algo.summary)(state.algo)
+        return feats, n, fval, state.active
+
+    # -------------------------------------------------------------- scale-out
+    def make_sharded_update(self, mesh, axis="data"):
+        """The P*S-session pod program: ``ingest`` shard_mapped over
+        ``axis`` (an axis name or a tuple of names — pass
+        ``("pod", "data")`` on a multi-pod mesh so the session axis
+        splits over BOTH, not replicated over 'pod').
+
+        Global state/queue leaves carry a leading P*S (respectively P*N)
+        axis sharded over ``axis``; each shard routes its N items to its
+        own S slots (the cluster front-end routes session_id -> shard,
+        e.g. ``sid % P``).  Returns a function
+        ``(state, sids, X) -> (state, stats)`` to be jitted with the
+        caller's shardings — one SPMD program for the whole pod.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        spec = P(axis)
+        return shard_map(
+            self.ingest, mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=(spec, {"counts": spec, "dropped_unknown": spec,
+                              "dropped_overflow": spec}),
+            check_vma=False)
+
+    # ------------------------------------------------------------- checkpoint
+    def save(self, store, step: int, state: PodState,
+             extra: Optional[Dict] = None):
+        """Checkpoint the whole pod (host-gathered, mesh-agnostic)."""
+        return store.save(step, state, extra or {})
+
+    def restore(self, store, step: Optional[int] = None, shardings=None
+                ) -> Tuple[PodState, Dict]:
+        """Restore a pod mid-stream; ``shardings`` (a PodState of
+        NamedShardings) reshards onto the *current* mesh — the saved
+        mesh shape is irrelevant (elastic restart)."""
+        if step is None:
+            step = store.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {store.root}")
+        return store.load(step, self.abstract_state(), shardings=shardings)

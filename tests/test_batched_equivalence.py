@@ -104,3 +104,51 @@ def test_batched_queries_and_memory_metrics():
         b = jax.jit(algo.run_batched)(algo.init(), X)
         assert int(a.n_queries) == int(b.n_queries)
         assert int(algo.memory_elements(a)) == int(algo.memory_elements(b))
+
+
+@pytest.mark.parametrize("name", BATCHED_ALGOS)
+def test_n_valid_prefix_bit_equals_unpadded(name):
+    """The ragged-chunk contract of the session engine: ``run_batched``
+    over a zero-padded buffer with ``n_valid`` set must bit-equal the
+    unpadded call — the garbage tail never accepts, never counts as a
+    rejection, never moves a rung."""
+    X = _data(seed=5, n=90)
+    algo = make(name, K=6, d=D, lengthscale=LS, eps=0.1, T=20)
+    # an adversarial tail: items that WOULD be accepted if unmasked
+    tail = jnp.tile(X[:1] + 50.0, (40, 1))
+    Xp = jnp.concatenate([X, tail])
+    want = jax.jit(algo.run_batched)(algo.init(), X)
+    got = jax.jit(algo.run_batched)(algo.init(), Xp, jnp.int32(90))
+    _assert_states_equal(want, got)
+    # the faithful masked scan agrees too
+    ref = jax.jit(lambda s, x: algo.run(s, x, jnp.int32(90)))(
+        algo.init(), Xp)
+    _assert_states_equal(want, ref)
+
+
+@pytest.mark.parametrize("name", BATCHED_ALGOS)
+def test_n_valid_zero_is_identity(name):
+    algo = make(name, K=5, d=D, lengthscale=LS, eps=0.1, T=15)
+    X = _data(seed=6, n=30)
+    st = jax.jit(algo.run_batched)(algo.init(), X)
+    out = jax.jit(algo.run_batched)(st, X, jnp.int32(0))
+    for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(st),
+                            jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"leaf {jax.tree_util.keystr(pa)} differs")
+
+
+@pytest.mark.parametrize("name", BATCHED_ALGOS)
+def test_n_valid_negative_clamps_to_zero(name):
+    """A negative n_valid (bad sentinel upstream) is an identity, not a
+    corruption of the lifetime query metrics."""
+    algo = make(name, K=5, d=D, lengthscale=LS, eps=0.1, T=15)
+    X = _data(seed=8, n=20)
+    st = jax.jit(algo.run_batched)(algo.init(), X)
+    out = jax.jit(algo.run_batched)(st, X, jnp.int32(-3))
+    for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(st),
+                            jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"leaf {jax.tree_util.keystr(pa)} differs")

@@ -76,3 +76,54 @@ def test_load_with_sharding(tmp_path):
     assert loaded["w"].sharding == sh["w"]
     np.testing.assert_array_equal(np.asarray(loaded["w"]),
                                   np.asarray(t["w"]))
+
+
+def test_async_save_failure_reraises(tmp_path, monkeypatch):
+    """Regression: a failed async write was swallowed on the daemon thread
+    and the save looked committed-in-flight.  The failure must re-raise
+    from ``wait()`` (or the next ``save_async``, which waits first)."""
+    store = CheckpointStore(tmp_path)
+
+    real_save = np.save
+
+    def broken_save(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "save", broken_save)
+    store.save_async(1, tree())
+    with pytest.raises(RuntimeError, match="async checkpoint save"):
+        store.wait()
+    # nothing was committed, and the failure is not raised twice
+    assert store.latest_step() is None
+    store.wait()
+
+    # the store recovers once the writer works again
+    monkeypatch.setattr(np, "save", real_save)
+    store.save_async(2, tree())
+    store.wait()
+    assert store.latest_step() == 2
+
+
+def test_async_save_failure_surfaces_on_next_save(tmp_path, monkeypatch):
+    store = CheckpointStore(tmp_path)
+    monkeypatch.setattr(np, "save",
+                        lambda *a, **kw: (_ for _ in ()).throw(OSError("x")))
+    store.save_async(1, tree())
+    store._thread.join()  # let the failure land without consuming it
+    with pytest.raises(RuntimeError, match="async checkpoint save"):
+        store.save_async(2, tree())
+
+
+def test_sync_save_joins_async_and_reraises(tmp_path, monkeypatch):
+    """``save`` must wait on an in-flight async write (no step-dir races)
+    and surface a stored async failure instead of silently proceeding."""
+    store = CheckpointStore(tmp_path)
+    monkeypatch.setattr(np, "save",
+                        lambda *a, **kw: (_ for _ in ()).throw(OSError("x")))
+    store.save_async(1, tree())
+    store._thread.join()
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="async checkpoint save"):
+        store.save(2, tree())
+    store.save(2, tree())  # failure consumed; the store works again
+    assert store.committed_steps() == [2]

@@ -130,3 +130,69 @@ def test_threesieves_under_interpret_backend():
     assert int(sa.ld.n) == int(sb.ld.n)
     np.testing.assert_allclose(np.asarray(sa.ld.feats),
                                np.asarray(sb.ld.feats), atol=1e-6)
+
+
+# ------------------------------------------------- epsilon centralization
+def test_saturated_gains_bit_equal_across_backends():
+    """Every gain path clamps ``dd2 = (1+a) - |c|^2`` at the same
+    ``GAIN_EPS`` (the jnp oracle, ``LogDet.append`` and the Pallas kernel
+    used to carry their own epsilon literals).  In exact arithmetic
+    monotonicity keeps dd2 >= 1, so the clamp is precisely the guard
+    against fp saturation — where backends disagreeing on the epsilon
+    would price the same item differently and flip accept decisions.
+    Drive the clamp through the oracle's function contract (a synthetic
+    ill-conditioned Linv) and assert bit-equal gains and accepts."""
+    from repro.constants import GAIN_EPS
+
+    rng = np.random.RandomState(4)
+    K, d, a = 4, 5, 1.0
+    for kind in ("rbf", "linear_norm"):
+        kernel = KernelConfig(kind, 1.3)
+        feats = jnp.asarray(np.tile(2.0 * rng.randn(1, d), (K, 1))
+                            .astype(np.float32))
+        linv = jnp.asarray(50.0 * np.eye(K, dtype=np.float32))
+        n = jnp.int32(K)
+        # row 0 duplicates the summary (|c|^2 >> 1+a -> clamp engages);
+        # row 1 is antipodal: k = 0 for both kernels (exp(-large) ~ 0 for
+        # rbf, cos = -1 for linear_norm) -> regular, un-clamped gain
+        X = jnp.concatenate([feats[:1], -feats[:1]])
+
+        o_jnp = GainOracle(kernel=kernel, a=a, backend="jnp")
+        o_int = GainOracle(kernel=kernel, a=a, backend="pallas-interpret")
+        g_jnp = np.asarray(o_jnp.gains(feats, linv, n, X))
+        g_int = np.asarray(o_int.gains(feats, linv, n, X))
+        clamped = np.float32(0.5 * np.log(np.float32(GAIN_EPS)))
+        assert g_jnp[0] == clamped, kind
+        assert g_jnp[1] > clamped, kind
+        np.testing.assert_array_equal(g_jnp, g_int, err_msg=kind)
+        # accept decisions against any threshold are therefore bit-equal
+        thr = np.linspace(-15.0, 1.0, 9, dtype=np.float32)[:, None]
+        np.testing.assert_array_equal(g_jnp[None, :] >= thr,
+                                      g_int[None, :] >= thr,
+                                      err_msg=kind)
+
+
+def test_append_gain_uses_same_clamp():
+    """``LogDet.append`` prices its accepted item with the identical
+    clamp the batched oracle uses (one constant, one decision)."""
+    f = LogDet(K=5, d=3, kernel=KernelConfig("rbf", 1.2), a=1.0)
+    st = _filled_state(f, 4, seed=2)
+    x = jnp.asarray(np.random.RandomState(5).randn(3).astype(np.float32))
+    batched = float(f.gains(st, x[None, :])[0])
+    appended = f.append(st, x)
+    np.testing.assert_allclose(float(appended.fval - st.fval), batched,
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_gain_eps_is_single_sourced():
+    """The clamp constant has exactly one definition site."""
+    from repro import constants
+    from repro.kernels.rbf_gain import kernel as kmod, ref as rmod
+
+    import inspect
+
+    assert constants.GAIN_EPS == 1e-12
+    for mod in (kmod, rmod):
+        src = inspect.getsource(mod)
+        assert "GAIN_EPS" in src and "1e-12" not in src.replace(
+            "NORM_EPS", "")

@@ -69,3 +69,30 @@ def test_driver_generates(arch):
     assert out.shape == (2, 14)
     assert (np.asarray(out[:, :8]) == np.asarray(prompts)).all()
     assert int(out.max()) < cfg.vocab
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-370m"])
+def test_driver_partial_batch(arch):
+    """Regression: ``generate`` hard-asserted B == compiled batch, so
+    partial admission (the normal serving case) was impossible.  Short
+    batches pad to the slot count, outputs mask back to B, and the result
+    matches running the same rows manually padded to the full batch."""
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    driver = ServeDriver(model=model, max_seq=32, batch=4)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                 cfg.vocab, jnp.int32)
+    out = driver.generate(params, prompts, n_new=5)
+    assert out.shape == (2, 13)
+    assert (np.asarray(out[:, :8]) == np.asarray(prompts)).all()
+    assert int(out.max()) < cfg.vocab
+
+    # full-batch call on the explicitly padded prompts agrees row-for-row
+    full = driver.generate(
+        params, jnp.concatenate(
+            [prompts, jnp.zeros((2, 8), jnp.int32)]), n_new=5)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(full[:2]))
+
+    with pytest.raises(ValueError, match="exceeds the compiled slot count"):
+        driver.generate(params, jnp.zeros((5, 8), jnp.int32), n_new=2)

@@ -132,3 +132,24 @@ def test_ladder_properties():
     # covers the bracket [m, K*m] within one (1+eps) factor
     assert vs[0] >= lad.K * lad.m / (1 + lad.eps)
     assert vs[-1] <= lad.m * (1 + lad.eps)
+
+
+def test_run_batched_bf16_objective():
+    """Regression: the while-loop gains carry hardcoded float32, crashing
+    ``run_batched`` for any LogDet dtype other than float32 (bf16 here).
+    The carry must follow ``f.dtype`` and stay bit-equal to ``run``."""
+    from repro.core import KernelConfig, LogDet
+    from repro.core.threesieves import ThreeSieves
+
+    f = LogDet(K=6, d=4, kernel=KernelConfig("rbf", 1.5),
+               dtype=jnp.bfloat16)
+    ts = ThreeSieves(f=f, T=9, eps=0.1)
+    X = jnp.asarray(_data(seed=12, n=80, d=4))
+    a = jax.jit(ts.run)(ts.init(), X)
+    b = jax.jit(ts.run_batched)(ts.init(), X)  # crashed before the fix
+    assert a.ld.fval.dtype == jnp.bfloat16
+    assert int(b.ld.n) == int(a.ld.n) > 0
+    np.testing.assert_array_equal(np.asarray(a.ld.feats, np.float32),
+                                  np.asarray(b.ld.feats, np.float32))
+    np.testing.assert_array_equal(np.asarray(a.ld.fval, np.float32),
+                                  np.asarray(b.ld.fval, np.float32))
