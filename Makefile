@@ -3,7 +3,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify bench-oracle bench-serve bench
+.PHONY: verify bench-oracle bench-serve bench-ingest bench
 
 # tier-1: the gate every PR must keep green
 verify:
@@ -16,6 +16,10 @@ bench-oracle:
 # SummarizerPod throughput vs session count -> BENCH_serve.json
 bench-serve:
 	python -m benchmarks.serve_bench --smoke --json BENCH_serve.json
+
+# synchronous vs double-buffered ingest -> BENCH_ingest.json
+bench-ingest:
+	python -m benchmarks.ingest_bench --smoke --json BENCH_ingest.json
 
 # full benchmark harness (paper tables + kernels + roofline)
 bench:

@@ -46,7 +46,7 @@ for rnd in range(ROUNDS):
     state, stats = ingest(state, sids, X)
     if rnd % 10 == 9:
         state, reset = drift(state)
-        feats, n, fval, active = pod.readout(state)
+        feats, n, fval, active, drops = pod.readout(state)
         n_reset = int(jnp.sum(reset))
         print(f"round {rnd + 1:3d}: items/session="
               f"{np.asarray(state.items).mean():7.1f}  mean f(S)="
@@ -66,8 +66,10 @@ print(f"restored checkpoint of round {extra['round']}; continuing")
 sids, X = next(stream)
 restored, _ = ingest(restored, sids, X)
 
-feats, n, fval, active = pod.readout(restored)
-print("final per-session summaries (restored pod):")
+feats, n, fval, active, drops = pod.readout(restored)
+print(f"final per-session summaries (restored pod); dropped: "
+      f"unknown={int(drops['unknown'])} "
+      f"overflow={int(jnp.sum(drops['overflow']))}")
 for s in range(S):
     print(f"  slot {s}: sid={int(restored.sid[s]):4d} "
           f"selected={int(n[s]):3d}  f(S)={float(fval[s]):6.3f}  "

@@ -1,10 +1,13 @@
-"""Version-compat shims for the JAX APIs that moved between releases.
+"""Version-compat shims for the JAX APIs that moved between releases,
+plus tiny cross-layer jit utilities.
 
 ``shard_map`` graduated from ``jax.experimental.shard_map`` (keyword
 ``check_rep``) to ``jax.shard_map`` (keyword ``check_vma``).  Call sites in
 this repo use the new-style keyword; the shim translates for older JAX.
 """
 from __future__ import annotations
+
+import functools
 
 try:  # jax >= 0.6: top-level export, `check_vma` keyword
     from jax import shard_map as _shard_map
@@ -23,4 +26,27 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
                       **kw)
 
 
-__all__ = ["shard_map"]
+def hashable_lru(maxsize: int = 64):
+    """``lru_cache`` that degrades to an uncached call on unhashable args.
+
+    The serving layers cache jitted programs keyed on the (frozen,
+    usually hashable) pod/algorithm dataclasses so resumable loops and
+    repeated pipelines don't retrace; an exotic unhashable algorithm
+    must still work, just without the shared cache.
+    """
+    def deco(fn):
+        cached = functools.lru_cache(maxsize=maxsize)(fn)
+
+        @functools.wraps(fn)
+        def wrapper(*args):
+            try:
+                return cached(*args)
+            except TypeError:
+                return fn(*args)
+
+        return wrapper
+
+    return deco
+
+
+__all__ = ["shard_map", "hashable_lru"]

@@ -282,16 +282,43 @@ class QuickStream:
 
         return jax.lax.cond(nbuf >= self.c, flush, hold, None)
 
-    def run(self, state: QSState, X: Array) -> QSState:
-        def body(s, x):
-            return self.step(s, x), None
+    def run(self, state: QSState, X: Array,
+            n_valid: Array | None = None) -> QSState:
+        """Per-item scan; ``n_valid`` (dynamic, optional) restricts
+        processing to the prefix ``X[:n_valid]`` with the padded tail
+        leaving the state bit-untouched — the sieve family's
+        ragged-chunk contract (``sieve_family.SieveAlgorithm.run``),
+        extended to this ring-buffer baseline so it can tenant a
+        mixed-algorithm SummarizerPod."""
+        if n_valid is None:
+            def body(s, x):
+                return self.step(s, x), None
 
-        out, _ = jax.lax.scan(body, state, X)
+            out, _ = jax.lax.scan(body, state, X)
+            return out
+
+        idx = jnp.arange(X.shape[0], dtype=jnp.int32)
+
+        def body(s, xi):
+            x, i = xi
+            s2 = self.step(s, x)
+            keep = i < n_valid
+            return jax.tree_util.tree_map(
+                lambda a, b: jnp.where(keep, a, b), s2, s), None
+
+        out, _ = jax.lax.scan(body, state, (X, idx))
         return out
 
-    def run_batched(self, state: QSState, X: Array) -> QSState:
+    def run_batched(self, state: QSState, X: Array,
+                    n_valid: Array | None = None) -> QSState:
         """Uniform-protocol alias — no batched fast path for this baseline."""
-        return self.run(state, X)
+        return self.run(state, X, n_valid)
+
+    def insertions(self, state: QSState) -> Array:
+        """Total ring insertions ever — () int32, monotone (``nA`` never
+        decreases; the live window is ``min(nA, cap)``).  The session
+        engine's accept-activity metric."""
+        return state.nA
 
     def summary(self, state: QSState) -> Tuple[Array, Array, Array]:
         """Final step: greedy-ish pick of K from the ring (best partition)."""

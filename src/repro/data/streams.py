@@ -138,7 +138,8 @@ def token_stream(seed: int, spec: TokenStreamSpec
 
 def session_stream(seed: int, spec: MixtureSpec, n_sessions: int,
                    batch: int, *, drift_per_batch: float = 0.0,
-                   session_ids: Optional[np.ndarray] = None
+                   session_ids: Optional[np.ndarray] = None,
+                   as_numpy: bool = False
                    ) -> Iterator[Tuple[Array, Array]]:
     """Tagged multi-tenant ingest queue for the SummarizerPod.
 
@@ -148,7 +149,9 @@ def session_stream(seed: int, spec: MixtureSpec, n_sessions: int,
     tenants), and each session draws from its *own* mixture — per-tenant
     distributions, optionally drifting per batch.  ``session_ids``
     overrides the default ids ``0..n_sessions-1`` (e.g. the external ids
-    a service admitted).
+    a service admitted).  ``as_numpy`` keeps batches host-resident (the
+    ingest pipeline routes on host before anything touches the device);
+    item values are identical either way.
     """
     rng = np.random.default_rng(seed)
     ids = (np.arange(n_sessions, dtype=np.int32)
@@ -163,9 +166,12 @@ def session_stream(seed: int, spec: MixtureSpec, n_sessions: int,
     while True:
         sess = rng.integers(0, n_sessions, batch)
         comp = rng.integers(0, spec.n_components, batch)
-        x = means[sess, comp] + spec.noise * rng.normal(
-            0, 1.0, (batch, spec.d)).astype(np.float32)
-        yield jnp.asarray(ids[sess]), jnp.asarray(x.astype(np.float32))
+        x = (means[sess, comp] + spec.noise * rng.normal(
+            0, 1.0, (batch, spec.d)).astype(np.float32)).astype(np.float32)
+        if as_numpy:
+            yield ids[sess], x
+        else:
+            yield jnp.asarray(ids[sess]), jnp.asarray(x)
         if drift_per_batch:
             means = means + drift_per_batch * rng.normal(
                 0, 1.0, means.shape).astype(np.float32)

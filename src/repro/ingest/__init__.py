@@ -1,0 +1,19 @@
+"""repro.ingest — the async streaming front-end of the SummarizerPod.
+
+Sources produce tagged host batches, the bounded TaggedBuffer absorbs
+rate mismatch under an explicit backpressure policy, and IngestPipeline
+double-buffers host routing against the device step:
+
+    Source -> TaggedBuffer -> host_route -> device_put -> ingest_routed
+    (producer threads)        (overlapped with the running pod program)
+"""
+from .buffer import PAD_SID, POLICIES, TaggedBuffer
+from .pipeline import IngestPipeline, host_route
+from .sources import (MAGIC, DriftSource, ReplaySource, SocketSource, Source,
+                      SubsampleSource, TaggedBatch, connect_producer,
+                      send_frame)
+
+__all__ = ["PAD_SID", "POLICIES", "TaggedBuffer", "IngestPipeline",
+           "host_route", "MAGIC", "DriftSource", "ReplaySource",
+           "SocketSource", "Source", "SubsampleSource", "TaggedBatch",
+           "connect_producer", "send_frame"]

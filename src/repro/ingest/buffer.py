@@ -1,0 +1,175 @@
+"""Bounded tagged buffer between producers and the pod's ingest loop.
+
+The decoupling point of the ingest subsystem: producer threads (a socket
+reader, a generator feeder) ``put`` tagged items in, the pipeline
+``get``s fixed-size device batches out.  Because the stream is
+unbounded and the device rate is finite, the buffer must answer the
+only question that matters under overload — *who loses data, and is it
+counted?* — which is Stream Clipper's (Zhou, 1606.00389) drop/defer
+framing:
+
+  * ``block``        defer: the producer waits for room (lossless; the
+                     right policy when the producer can be paused —
+                     e.g. a local generator);
+  * ``drop-newest``  clip the arriving item (the classic admission
+                     bound: what is in the buffer is older and already
+                     paid for);
+  * ``drop-oldest``  clip from the *longest* session queue's head (the
+                     freshest view wins; heavy tenants lose first, so
+                     one noisy stream cannot starve the quiet ones).
+
+Drops are counted **per session** — under summarization, losing items
+is semantically fine (the algorithms subsample by design) but losing
+them *silently and unevenly* is not.
+
+Fairness: items live in per-session FIFO queues; ``get`` drains them
+round-robin, one item per live session per turn.  Per-session order is
+therefore preserved end-to-end (the pod's routing contract); global
+interleaving is deliberately NOT preserved — that is the fairness.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+POLICIES = ("block", "drop-newest", "drop-oldest")
+PAD_SID = -1  # the pod's queue-padding sentinel
+
+
+class TaggedBuffer:
+    """Bounded, thread-safe, per-session-fair tagged item buffer."""
+
+    def __init__(self, capacity: int, policy: str = "block"):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.capacity = capacity
+        self.policy = policy
+        self._q: "collections.OrderedDict[int, collections.deque]" = \
+            collections.OrderedDict()  # sid -> FIFO of (d,) float32 rows
+        self._size = 0
+        self._closed = False
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+        self._not_empty = threading.Condition(self._lock)
+        self.drops: Dict[int, int] = {}  # sid -> items clipped
+
+    # ------------------------------------------------------------- properties
+    @property
+    def size(self) -> int:
+        with self._lock:
+            return self._size
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    def drop_counts(self) -> Dict[int, int]:
+        with self._lock:
+            return dict(self.drops)
+
+    # --------------------------------------------------------------- producer
+    def put(self, sids, X, timeout: Optional[float] = None) -> int:
+        """Enqueue a tagged batch; returns the number of items dropped.
+
+        ``block`` waits for room (``timeout`` seconds per stalled item,
+        None = forever) and raises ``TimeoutError`` on expiry; the drop
+        policies never wait.  Raises ``ValueError`` after ``close()``.
+        """
+        sids = np.asarray(sids, np.int32).ravel()
+        X = np.asarray(X, np.float32)
+        dropped = 0
+        with self._lock:
+            for sid, row in zip(sids.tolist(), X):
+                if self._closed:
+                    raise ValueError("put() on a closed TaggedBuffer")
+                if self._size >= self.capacity:
+                    if self.policy == "block":
+                        if not self._not_full.wait_for(
+                                lambda: self._size < self.capacity
+                                or self._closed, timeout):
+                            raise TimeoutError(
+                                f"TaggedBuffer full ({self.capacity}) for "
+                                f"{timeout}s")
+                        if self._closed:
+                            raise ValueError("put() on a closed TaggedBuffer")
+                    elif self.policy == "drop-newest":
+                        self.drops[sid] = self.drops.get(sid, 0) + 1
+                        dropped += 1
+                        continue
+                    else:  # drop-oldest: clip the longest queue's head
+                        victim = max(self._q, key=lambda s: len(self._q[s]))
+                        self._q[victim].popleft()
+                        if not self._q[victim]:
+                            del self._q[victim]
+                        self._size -= 1
+                        self.drops[victim] = self.drops.get(victim, 0) + 1
+                        dropped += 1
+                self._q.setdefault(sid, collections.deque()).append(row)
+                self._size += 1
+                self._not_empty.notify_all()  # waiters may need min_items
+        return dropped
+
+    def close(self) -> None:
+        """End-of-stream: wake every waiter; ``get`` drains what is left."""
+        with self._lock:
+            self._closed = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+    # --------------------------------------------------------------- consumer
+    def get(self, max_items: int, *, pad_to: Optional[int] = None,
+            timeout: Optional[float] = None, d: Optional[int] = None,
+            min_items: int = 1
+            ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Dequeue up to ``max_items`` items, round-robin across sessions.
+
+        Blocks until at least ``min_items`` are available (or the buffer
+        is closed — then drains what is left, however little, and
+        finally returns ``None``, the end-of-stream sentinel).  A
+        ``min_items`` near the device batch size keeps a fast consumer
+        from burning full jitted steps on near-all-padding batches when
+        the producer trickles; the default of 1 favors latency.
+        ``timeout`` raises ``TimeoutError`` on an open-but-underfilled
+        buffer.  ``pad_to`` right-pads the batch with (PAD_SID,
+        zero-row) entries to a fixed length — the shape contract of the
+        jitted pod program (``d`` sizes the zero rows when the batch
+        itself is empty).
+        """
+        need = max(1, min(min_items, max_items))
+        with self._lock:
+            if not self._not_empty.wait_for(
+                    lambda: self._size >= need or self._closed, timeout):
+                raise TimeoutError(
+                    f"TaggedBuffer below {need} items for {timeout}s")
+            if self._size == 0:  # closed and drained
+                return None
+            out_s, out_x = [], []
+            while len(out_s) < max_items and self._q:
+                # one item per live session per round — the fairness turn
+                for sid in list(self._q):
+                    if len(out_s) >= max_items:
+                        break
+                    dq = self._q[sid]
+                    out_s.append(sid)
+                    out_x.append(dq.popleft())
+                    if not dq:
+                        del self._q[sid]
+            self._size -= len(out_s)
+            self._not_full.notify_all()
+        sids = np.asarray(out_s, np.int32)
+        X = np.stack(out_x).astype(np.float32)
+        if pad_to is not None and len(sids) < pad_to:
+            n_pad = pad_to - len(sids)
+            width = X.shape[1] if X.size else d
+            if width is None:
+                raise ValueError("empty batch needs ``d`` to size padding")
+            sids = np.concatenate(
+                [sids, np.full((n_pad,), PAD_SID, np.int32)])
+            X = np.concatenate([X, np.zeros((n_pad, width), np.float32)])
+        return sids, X

@@ -1,0 +1,242 @@
+"""Double-buffered ingest: host routing overlapped with the device step.
+
+The synchronous feed (``jit(pod.ingest)`` per batch) serializes three
+stages that have no business being serial: building the tagged batch on
+host, the routing scatter, and the vmapped ``run_batched`` program.
+``IngestPipeline`` splits them:
+
+    device |  advance(i-1)  |   advance(i)    |  advance(i+1)  |
+    host   | route(i) put(i)| route(i+1) put  | route(i+2) ...  |
+
+  * routing moves to host (``host_route`` — a numpy mirror of
+    ``SummarizerPod.route``, bit-equal by construction and pinned by
+    test), so the device program is ``ingest_routed``: run_batched +
+    counters only, no (N, S) id-match or scatter on its critical path;
+  * JAX's async dispatch provides the overlap: ``advance(i)`` returns
+    as soon as the program is enqueued, and the host spends the device
+    step's wall time producing, repacking and routing batch i+1, then
+    ``jax.device_put``-ing it;
+  * the pod state is donated to the jitted step (off-CPU), so the
+    stacked session pytree is updated in place — no per-step state
+    round-trips.
+
+Routing on host is legal precisely because the slot table (sid, active)
+only changes through lifecycle calls (admit/evict), never through
+``ingest`` itself — ``run()`` snapshots it once at entry, and lifecycle
+ops between ``run()`` calls are picked up by the next snapshot
+(drift resets keep slots, so ``serve``'s periodic ``drift_check`` needs
+no re-snapshot).
+
+Feed modes:
+  * ``source=``              pull tagged batches inline and repack to the
+                             fixed device batch size (benchmarks, replays);
+  * ``buffer=``              drain a ``TaggedBuffer`` that producer
+                             threads fill (sockets, generators) — add
+                             ``feed_from(source)`` to spawn the feeder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.compat import hashable_lru
+
+from .buffer import PAD_SID, TaggedBuffer
+from .sources import Source, TaggedBatch
+
+
+def host_route(sid_table: np.ndarray, active: np.ndarray, sids: np.ndarray,
+               X: np.ndarray, chunk: int
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Numpy mirror of ``SummarizerPod.route`` — bit-equal by construction.
+
+    (sid_table (S,), active (S,), sids (N,), X (N, d), chunk C) ->
+    (chunks (S, C, d), counts (S,), unknown (), overflow (S,)).
+    Stability of the argsort gives per-session FIFO, exactly as the
+    device scatter's stable sort does.
+    """
+    S, C = len(sid_table), chunk
+    N = len(sids)
+    sids = np.asarray(sids, np.int32)
+    match = (sids[:, None] == sid_table[None, :]) & active[None, :]
+    found = match.any(axis=1)
+    slot = np.where(found, match.argmax(axis=1), S)
+    order = np.argsort(slot, kind="stable")
+    seg_start = np.searchsorted(slot[order], slot[order], side="left")
+    pos = np.empty((N,), np.int64)
+    pos[order] = np.arange(N, dtype=np.int64) - seg_start
+    keep = found & (pos < C)
+    chunks = np.zeros((S, C) + X.shape[1:], X.dtype)
+    chunks[slot[keep], pos[keep]] = X[keep]
+    counts = np.bincount(slot[keep], minlength=S).astype(np.int32)
+    unknown = np.int32((~found & (sids >= 0)).sum())
+    over = found & (pos >= C)
+    overflow = np.bincount(slot[over], minlength=S).astype(np.int32)
+    return chunks, counts, unknown, overflow
+
+
+@hashable_lru(maxsize=32)
+def _advance_for(pod, donate):
+    return jax.jit(pod.ingest_routed, donate_argnums=donate)
+
+
+@dataclasses.dataclass
+class IngestPipeline:
+    """Drive a SummarizerPod from a tagged source, double-buffered.
+
+    ``batch`` is the fixed device batch size: ragged source batches are
+    repacked (and the final partial batch PAD_SID-padded) so the jitted
+    step compiles exactly once.  Size it so that no session exceeds the
+    pod's per-session routing capacity ``chunk`` within one batch —
+    ``batch <= pod.chunk`` is the safe default for a single-session
+    worst case (everything else is counted overflow, never corrupted).
+    """
+
+    pod: "object"  # SummarizerPod (kept loose to avoid an import cycle)
+    source: Optional[Source] = None
+    buffer: Optional[TaggedBuffer] = None
+    batch: int = 256
+    get_timeout: Optional[float] = None  # buffer mode: None = wait forever
+    min_fill: int = 1  # buffer mode: items to wait for per device batch
+    # (raise toward ``batch`` when a trickling producer must not burn a
+    # full jitted step per item; 1 favors latency)
+
+    def __post_init__(self):
+        if (self.source is None) == (self.buffer is None):
+            raise ValueError(
+                "exactly one of source= or buffer= must be given")
+        self._gen: Optional[Iterator[TaggedBatch]] = None
+        self._advance = None
+        self._feeders = []
+        self._feed_exc: Optional[BaseException] = None
+        self.exhausted = False
+
+    # ------------------------------------------------------------------ feed
+    def feed_from(self, source: Source, *, close: bool = True,
+                  put_timeout: Optional[float] = None) -> threading.Thread:
+        """Spawn a daemon thread that puts ``source`` into the buffer
+        (and closes it on exhaustion) — the producer half of buffer mode.
+        Backpressure is the buffer's policy: ``block`` pauses the
+        feeder, the drop policies clip per session."""
+        if self.buffer is None:
+            raise ValueError("feed_from() needs buffer mode")
+
+        def _run():
+            try:
+                for sids, X in source:
+                    self.buffer.put(sids, X, timeout=put_timeout)
+            except BaseException as e:
+                # surfaced by run(): a wire failure must not masquerade
+                # as a clean end-of-stream with fewer items
+                self._feed_exc = e
+            finally:
+                if close:
+                    self.buffer.close()
+
+        t = threading.Thread(target=_run, daemon=True)
+        t.start()
+        self._feeders.append(t)
+        return t
+
+    def _fixed_batches(self) -> Iterator[TaggedBatch]:
+        """Repack ragged tagged batches into exactly-``batch``-sized ones
+        (last one padded); per-session FIFO is order-preserving here."""
+        B = self.batch
+        d = self.pod.algo.f.d
+        if self.buffer is not None:
+            while True:
+                got = self.buffer.get(B, pad_to=B, d=d,
+                                      timeout=self.get_timeout,
+                                      min_items=self.min_fill)
+                if got is None:
+                    return
+                yield got
+        stash: list = []
+        count = 0
+        for sids, X in self.source:
+            if not count and len(sids) == B:
+                yield sids, X  # aligned fast path: no copy
+                continue
+            stash.append((sids, X))
+            count += len(sids)
+            while count >= B:
+                s = np.concatenate([p[0] for p in stash])
+                x = np.concatenate([p[1] for p in stash])
+                yield s[:B], x[:B]
+                stash = [(s[B:], x[B:])] if count > B else []
+                count -= B
+        if count:
+            s = np.concatenate([p[0] for p in stash])
+            x = np.concatenate([p[1] for p in stash])
+            pad = B - count
+            yield (np.concatenate([s, np.full((pad,), PAD_SID, np.int32)]),
+                   np.concatenate([x, np.zeros((pad, x.shape[1]),
+                                               np.float32)]))
+
+    # ------------------------------------------------------------------- run
+    def _advance_fn(self):
+        if self._advance is None:
+            # donating the stacked state needs real accelerator buffers;
+            # on CPU it only produces a warning per call.  The program is
+            # shared across pipelines on the same pod (hashable_lru).
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+            self._advance = _advance_for(self.pod, donate)
+        return self._advance
+
+    def run(self, state, *, max_batches: Optional[int] = None):
+        """Ingest up to ``max_batches`` device batches (None = until the
+        feed ends); resumable — the feed position persists across calls.
+        Returns ``(state, stats)``.
+
+        ``stats`` carries the drop counters the host routing observed
+        (``dropped_unknown`` / ``dropped_overflow``) — items lost to a
+        mis-sized ``batch`` vs ``pod.chunk`` or to dead session ids are
+        loud here, not just in the device-side ledgers.  A producer
+        failure recorded by a ``feed_from`` thread re-raises from here:
+        a broken wire must never look like a clean end-of-stream.
+        """
+        advance = self._advance_fn()
+        sid_table = np.asarray(state.sid)
+        active = np.asarray(state.active)
+        C = self.pod.chunk
+        if self._gen is None:
+            self._gen = self._fixed_batches()
+        batches = items = padded = 0
+        drop_unknown = drop_overflow = 0
+        t0 = time.perf_counter()
+        while max_batches is None or batches < max_batches:
+            try:
+                sids, X = next(self._gen)
+            except StopIteration:
+                self.exhausted = True
+                break
+            chunks, counts, unknown, overflow = host_route(
+                sid_table, active, sids, X, C)
+            state, _ = advance(state, jax.device_put(chunks),
+                               jax.device_put(counts),
+                               jax.device_put(unknown),
+                               jax.device_put(overflow))
+            # while the device runs this step, the loop's next iteration
+            # produces + routes the following batch on host — the overlap
+            batches += 1
+            n_pad = int((sids == PAD_SID).sum())
+            items += len(sids) - n_pad
+            padded += n_pad
+            drop_unknown += int(unknown)
+            drop_overflow += int(overflow.sum())
+        jax.block_until_ready(state.items)
+        wall = time.perf_counter() - t0
+        if self._feed_exc is not None:
+            exc, self._feed_exc = self._feed_exc, None
+            raise RuntimeError(
+                "ingest producer failed mid-stream (items already routed "
+                "are in the pod state)") from exc
+        return state, {"batches": batches, "items": items,
+                       "padded": padded, "wall_s": wall,
+                       "dropped_unknown": drop_unknown,
+                       "dropped_overflow": drop_overflow}

@@ -44,7 +44,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.compat import hashable_lru
 from repro.core.sieve_family import stack_states, tree_select
 
 Array = jax.Array
@@ -63,10 +65,20 @@ class PodState:
     win_items: Array  # (S,) int32 — items since the last drift check/reset
     win_accepts: Array  # (S,) int32 — accepts since the last check/reset
     resets: Array  # (S,) int32 — drift resets performed on the slot
+    drops_overflow: Array  # (S,) int32 — items dropped past the slot's C
+    drops_unknown: Array  # (S,) int32 — unknown-sid drop ledger; the count
+    # lands on the shard's first slot (a scalar leaf could not shard over
+    # the session axis), so ``jnp.sum`` gives the pod total
 
     @property
     def S(self) -> int:
         return self.sid.shape[0]
+
+
+@hashable_lru(maxsize=64)
+def _drift_for(pod, min_items: int, min_rate: float):
+    return jax.jit(lambda s: pod.drift_check(
+        s, min_items=min_items, min_rate=min_rate))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +104,7 @@ class SummarizerPod:
             sid=jnp.full((S,), -1, jnp.int32),
             active=jnp.zeros((S,), bool),
             items=zi, accepts=zi, win_items=zi, win_accepts=zi, resets=zi,
+            drops_overflow=zi, drops_unknown=zi,
         )
 
     def abstract_state(self) -> PodState:
@@ -143,6 +156,9 @@ class SummarizerPod:
             win_items=jnp.where(hot, z, state.win_items),
             win_accepts=jnp.where(hot, z, state.win_accepts),
             resets=jnp.where(hot, z, state.resets),
+            # session-scoped: a recycled slot starts with a clean overflow
+            # ledger; drops_unknown is pod-scoped and survives admits
+            drops_overflow=jnp.where(hot, z, state.drops_overflow),
         )
         return state, slot, ok
 
@@ -194,7 +210,7 @@ class SummarizerPod:
         """Scatter a tagged ingest batch to per-session chunk buffers.
 
         sids (N,) int32 session ids (-1 = queue padding), X (N, d)
-        -> (chunks (S, C, d), counts (S,), unknown (), overflow ()).
+        -> (chunks (S, C, d), counts (S,), unknown (), overflow (S,)).
 
         Fixed-shape throughout: each item resolves to its slot (items
         with no live session fall into a trash row), takes the next
@@ -203,8 +219,13 @@ class SummarizerPod:
         The two drop causes are counted separately: ``unknown`` (no live
         session — a front-end routing error, lost tenant data) vs
         ``overflow`` (beyond a slot's C capacity — benign backpressure,
-        size the ingest batches).  Folding them together would hide the
-        first behind the second.
+        counted per session so the noisy tenant is identifiable).
+        Folding them together would hide the first behind the second.
+
+        ``ingest.host_route`` is the host-side (numpy) mirror of this
+        scatter, bit-equal by construction — the double-buffered
+        pipeline pre-routes chunk i+1 there while the device runs step i
+        (tests/test_ingest.py pins the equivalence).
         """
         S, C = self.sessions, self.chunk
         N = sids.shape[0]
@@ -228,7 +249,8 @@ class SummarizerPod:
         # (bincount drops the out-of-range trash index S — no (N, S)
         # equality matrix on the hot path)
         unknown = jnp.sum(~found & (sids >= 0)).astype(jnp.int32)
-        overflow = jnp.sum(found & (pos >= C)).astype(jnp.int32)
+        over_slot = jnp.where(found & (pos >= C), slot, S)
+        overflow = jnp.bincount(over_slot, length=S).astype(jnp.int32)
         return chunks, counts, unknown, overflow
 
     # ----------------------------------------------------------------- ingest
@@ -241,31 +263,57 @@ class SummarizerPod:
         mix of sessions the batch addresses.
         """
         chunks, counts, unknown, overflow = self.route(state, sids, X)
+        return self.ingest_routed(state, chunks, counts, unknown, overflow)
+
+    def ingest_routed(self, state: PodState, chunks: Array, counts: Array,
+                      unknown: Array, overflow: Array
+                      ) -> Tuple[PodState, Dict[str, Array]]:
+        """Advance every session from *pre-routed* chunk buffers.
+
+        The double-buffered ingest pipeline computes the routing scatter
+        on host for batch i+1 while this (jitted, state-donated) program
+        runs batch i on device — so the device program is run_batched +
+        counters only, no (N, S) id-match or scatter on its critical
+        path.  ``ingest`` is exactly ``route`` + this.
+
+        ``unknown`` may be () or (1,) — the sharded pre-routed program
+        hands each shard its slice of a (P,) global drop vector.
+        """
         n_before = self._insertions(state)
         algo2 = jax.vmap(self.algo.run_batched)(state.algo, chunks, counts)
         state2 = dataclasses.replace(state, algo=algo2)
         acc = self._insertions(state2) - n_before  # (S,) this batch
+        unk = jnp.sum(jnp.asarray(unknown, jnp.int32))
         state2 = dataclasses.replace(
             state2,
             items=state.items + counts,
             accepts=state.accepts + acc,
             win_items=state.win_items + counts,
             win_accepts=state.win_accepts + acc,
+            drops_overflow=state.drops_overflow + overflow,
+            drops_unknown=state.drops_unknown.at[0].add(unk),
         )
         return state2, {"counts": counts,
-                        "dropped_unknown": unknown[None],
-                        "dropped_overflow": overflow[None]}
+                        "dropped_unknown": unk[None],
+                        "dropped_overflow": overflow}
 
     # ---------------------------------------------------------------- readout
     def readout(self, state: PodState
-                ) -> Tuple[Array, Array, Array, Array]:
+                ) -> Tuple[Array, Array, Array, Array, Dict[str, Array]]:
         """Periodic per-session summaries: (feats (S, K, d), n (S,),
-        fval (S,), active (S,))."""
+        fval (S,), active (S,), drops).  ``drops`` surfaces the lifetime
+        drop ledgers ``route``/``ingest`` accumulate: per-session
+        ``overflow`` (S,) and the pod-total ``unknown`` () — silently
+        losing tenant data is the one failure mode a summarization
+        service must never hide."""
         feats, n, fval = jax.vmap(self.algo.summary)(state.algo)
-        return feats, n, fval, state.active
+        drops = {"overflow": state.drops_overflow,
+                 "unknown": jnp.sum(state.drops_unknown)}
+        return feats, n, fval, state.active, drops
 
     # -------------------------------------------------------------- scale-out
-    def make_sharded_update(self, mesh, axis="data"):
+    def make_sharded_update(self, mesh, axis="data", *,
+                            pre_routed: bool = False):
         """The P*S-session pod program: ``ingest`` shard_mapped over
         ``axis`` (an axis name or a tuple of names — pass
         ``("pod", "data")`` on a multi-pod mesh so the session axis
@@ -277,18 +325,67 @@ class SummarizerPod:
         e.g. ``sid % P``).  Returns a function
         ``(state, sids, X) -> (state, stats)`` to be jitted with the
         caller's shardings — one SPMD program for the whole pod.
+
+        ``pre_routed=True`` returns the ``ingest_routed`` program
+        instead — ``(state, chunks, counts, unknown, overflow) ->
+        (state, stats)`` with chunks (P*S, C, d), counts/overflow (P*S,)
+        and unknown (P,) (one host-routed count per shard): the device
+        side of the double-buffered ingest pipeline, with the routing
+        scatter gone from the SPMD program entirely.
         """
         from jax.sharding import PartitionSpec as P
 
         from repro.compat import shard_map
 
         spec = P(axis)
+        stats_spec = {"counts": spec, "dropped_unknown": spec,
+                      "dropped_overflow": spec}
+        if pre_routed:
+            return shard_map(
+                self.ingest_routed, mesh=mesh,
+                in_specs=(spec, spec, spec, spec, spec),
+                out_specs=(spec, stats_spec),
+                check_vma=False)
         return shard_map(
             self.ingest, mesh=mesh,
             in_specs=(spec, spec, spec),
-            out_specs=(spec, {"counts": spec, "dropped_unknown": spec,
-                              "dropped_overflow": spec}),
+            out_specs=(spec, stats_spec),
             check_vma=False)
+
+    # ------------------------------------------------------------------ serve
+    def serve(self, state: PodState, pipeline, *, max_batches=None,
+              drift_every: int = 0, min_items: int = 0,
+              min_rate: float = 0.0):
+        """Drive the pod from an ``ingest.IngestPipeline`` — the
+        streaming front-end loop.
+
+        The pipeline owns the hot loop (double-buffered host routing +
+        donated device steps); this wrapper interleaves the pod-level
+        control plane: every ``drift_every`` device batches it pauses
+        the pipeline at a safe point and runs ``drift_check`` (resets do
+        not move slots, so the pipeline's host slot table stays valid).
+        Returns ``(state, stats)`` with the pipeline's throughput/drop
+        stats.
+        """
+        if drift_every and drift_every > 0:
+            # serve() is resumable — don't retrace drift per call
+            drift = _drift_for(self, min_items, min_rate)
+            total = {}
+            remaining = max_batches
+            while True:
+                n = (drift_every if remaining is None
+                     else min(drift_every, remaining))
+                state, stats = pipeline.run(state, max_batches=n)
+                for k, v in stats.items():
+                    total[k] = total.get(k, 0) + v
+                state, _ = drift(state)
+                if remaining is not None:
+                    remaining -= stats["batches"]
+                    if remaining <= 0:
+                        return state, total
+                if stats["batches"] < n or pipeline.exhausted:
+                    return state, total
+        return pipeline.run(state, max_batches=max_batches)
 
     # ------------------------------------------------------------- checkpoint
     def save(self, store, step: int, state: PodState,
@@ -296,13 +393,73 @@ class SummarizerPod:
         """Checkpoint the whole pod (host-gathered, mesh-agnostic)."""
         return store.save(step, state, extra or {})
 
-    def restore(self, store, step: Optional[int] = None, shardings=None
+    def restore(self, store, step: Optional[int] = None, shardings=None,
+                *, slots=None, into: Optional[PodState] = None,
+                saved_sessions: Optional[int] = None
                 ) -> Tuple[PodState, Dict]:
         """Restore a pod mid-stream; ``shardings`` (a PodState of
         NamedShardings) reshards onto the *current* mesh — the saved
-        mesh shape is irrelevant (elastic restart)."""
+        mesh shape is irrelevant (elastic restart).
+
+        ``slots`` selects a *subset* of the saved session rows — a bool
+        mask or an index array over the saved pod's slots — and places
+        them into the free slots of the live pod state ``into`` (the
+        session-migration half of pod autoscaling: drain on pod A,
+        restore rows into pod B without touching B's resident tenants).
+        ``saved_sessions`` sizes the saved pod when it differs from this
+        pod's ``sessions`` (migrating between pods of different width).
+        Inactive saved rows among the selection are skipped; a selected
+        session id already live in ``into`` is a conflict (the session
+        would be hosted twice) and raises.  ``into``'s pod-scoped
+        ``drops_unknown`` ledger is kept as-is — it is not session
+        state.
+        """
         if step is None:
             step = store.latest_step()
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {store.root}")
-        return store.load(step, self.abstract_state(), shardings=shardings)
+        if slots is None:
+            return store.load(step, self.abstract_state(), shardings=shardings)
+
+        if into is None:
+            raise ValueError("slot-subset restore needs the live pod state: "
+                             "restore(..., slots=..., into=state)")
+        donor = (self if saved_sessions is None
+                 else dataclasses.replace(self, sessions=saved_sessions))
+        saved, extra = store.load(step, donor.abstract_state())
+        S_saved = donor.sessions
+        slots = np.asarray(slots)
+        sel = (np.flatnonzero(slots) if slots.dtype == bool
+               else slots.astype(np.int64).ravel())
+        if sel.size and (sel.min() < 0 or sel.max() >= S_saved):
+            raise IndexError(f"slot index out of range for saved pod of "
+                             f"{S_saved} sessions: {sel}")
+        # dedupe (first occurrence wins): a repeated index would place the
+        # same session into two slots — the double-hosted state admit()'s
+        # idempotency guard exists to prevent
+        sel = sel[np.sort(np.unique(sel, return_index=True)[1])]
+        saved_active = np.asarray(saved.active)
+        sel = sel[saved_active[sel]]  # skip dead saved rows
+        live_sids = np.asarray(into.sid)[np.asarray(into.active)]
+        moving = np.asarray(saved.sid)[sel]
+        clash = np.intersect1d(moving, live_sids)
+        if clash.size:
+            raise ValueError(f"session ids {clash.tolist()} are already live "
+                             "in the target pod")
+        free = np.flatnonzero(~np.asarray(into.active))
+        if sel.size > free.size:
+            raise ValueError(f"target pod has {free.size} free slots for "
+                             f"{sel.size} restored sessions")
+        dst = free[: sel.size]
+
+        def place(saved_leaf, live_leaf, sh=None):
+            out = np.array(live_leaf)
+            out[dst] = np.asarray(saved_leaf)[sel]
+            return jnp.asarray(out) if sh is None else jax.device_put(out, sh)
+
+        if shardings is None:
+            merged = jax.tree_util.tree_map(place, saved, into)
+        else:  # honor the live pod's target shardings leaf-for-leaf
+            merged = jax.tree_util.tree_map(place, saved, into, shardings)
+        merged = dataclasses.replace(merged, drops_unknown=into.drops_unknown)
+        return merged, extra

@@ -24,3 +24,12 @@ except ModuleNotFoundError:
 import jax  # noqa: E402
 
 jax.config.update("jax_default_prng_impl", "threefry2x32")
+
+
+def pytest_configure(config):
+    # enforced by pytest-timeout when installed (CI); the socket sources
+    # additionally carry their own socket-level timeouts, so a dead
+    # socket fails fast either way
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test timeout for tests that touch sockets")

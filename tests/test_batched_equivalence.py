@@ -19,6 +19,9 @@ D, LS = 4, 1.5
 BATCHED_ALGOS = ["threesieves", "sievestreaming", "sievestreaming++", "salsa"]
 ALIAS_ALGOS = ["random", "independentsetimprovement", "preemptionstreaming",
                "quickstream"]
+# the ragged-chunk (n_valid) contract: the sieve family plus the ring-buffer
+# baseline that can tenant a mixed-algorithm SummarizerPod
+N_VALID_ALGOS = BATCHED_ALGOS + ["quickstream"]
 
 
 def _data(seed=0, n=300):
@@ -106,7 +109,7 @@ def test_batched_queries_and_memory_metrics():
         assert int(algo.memory_elements(a)) == int(algo.memory_elements(b))
 
 
-@pytest.mark.parametrize("name", BATCHED_ALGOS)
+@pytest.mark.parametrize("name", N_VALID_ALGOS)
 def test_n_valid_prefix_bit_equals_unpadded(name):
     """The ragged-chunk contract of the session engine: ``run_batched``
     over a zero-padded buffer with ``n_valid`` set must bit-equal the
@@ -126,7 +129,7 @@ def test_n_valid_prefix_bit_equals_unpadded(name):
     _assert_states_equal(want, ref)
 
 
-@pytest.mark.parametrize("name", BATCHED_ALGOS)
+@pytest.mark.parametrize("name", N_VALID_ALGOS)
 def test_n_valid_zero_is_identity(name):
     algo = make(name, K=5, d=D, lengthscale=LS, eps=0.1, T=15)
     X = _data(seed=6, n=30)
@@ -139,7 +142,7 @@ def test_n_valid_zero_is_identity(name):
             err_msg=f"leaf {jax.tree_util.keystr(pa)} differs")
 
 
-@pytest.mark.parametrize("name", BATCHED_ALGOS)
+@pytest.mark.parametrize("name", N_VALID_ALGOS)
 def test_n_valid_negative_clamps_to_zero(name):
     """A negative n_valid (bad sentinel upstream) is an identity, not a
     corruption of the lifetime query metrics."""

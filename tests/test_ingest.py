@@ -1,0 +1,498 @@
+"""repro.ingest: sources, buffer backpressure, host routing, pipeline.
+
+The two load-bearing claims, pinned property-style:
+
+  * ordering — per-session FIFO survives everything between a producer
+    and the pod: ragged batches, repacking across chunk boundaries,
+    buffer fairness rotation, and the drop policies (survivors stay in
+    order; only *which* items survive changes);
+  * equivalence — ``host_route`` is bit-equal to the device ``route``,
+    and the double-buffered pipeline is bit-equal to the synchronous
+    ingest loop on the same stream.
+
+Socket tests carry a ``timeout`` mark (enforced by pytest-timeout when
+installed) *and* socket-level timeouts inside ``SocketSource`` itself,
+so a dead socket fails fast rather than hanging CI either way.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import make
+from repro.ingest import (PAD_SID, DriftSource, IngestPipeline, ReplaySource,
+                          SocketSource, SubsampleSource, TaggedBuffer,
+                          connect_producer, host_route, send_frame)
+from repro.serve import SummarizerPod
+
+D = 5
+
+
+def _pod(S=4, C=8, K=4, **kw):
+    algo = make("threesieves", K=K, d=D, lengthscale=1.5, eps=0.1,
+                T=kw.pop("T", 11), **kw)
+    return SummarizerPod(algo=algo, sessions=S, chunk=C)
+
+
+def _admit_all(pod, state, sids):
+    for sid in sids:
+        state, _, ok = pod.admit(state, jnp.int32(sid))
+        assert bool(ok)
+    return state
+
+
+def _tagged(rng, n, sessions, d=D):
+    sids = rng.choice(np.asarray(sessions, np.int32), n)
+    X = rng.randn(n, d).astype(np.float32)
+    # a distinct per-item fingerprint so order checks are unambiguous
+    X[:, 0] = np.arange(n, dtype=np.float32)
+    return sids.astype(np.int32), X
+
+
+def _per_session(sids, X):
+    return {int(s): X[sids == s] for s in np.unique(sids)}
+
+
+# -------------------------------------------------------------------- sources
+def test_replay_source_slices_and_concatenates(tmp_path):
+    rng = np.random.RandomState(0)
+    sids, X = _tagged(rng, 23, [1, 2, 3])
+    src = ReplaySource(sids=sids, X=X, batch=10)
+    got = list(src)
+    assert [len(s) for s, _ in got] == [10, 10, 3]
+    np.testing.assert_array_equal(np.concatenate([s for s, _ in got]), sids)
+    np.testing.assert_array_equal(np.concatenate([x for _, x in got]), X)
+    # .npy paths load identically
+    np.save(tmp_path / "s.npy", sids)
+    np.save(tmp_path / "x.npy", X)
+    src2 = ReplaySource(sids=tmp_path / "s.npy", X=tmp_path / "x.npy",
+                        batch=10)
+    for (a, b), (c, d) in zip(src, src2):
+        np.testing.assert_array_equal(a, c)
+        np.testing.assert_array_equal(b, d)
+    # from_batches round-trips a ragged feed
+    src3 = ReplaySource.from_batches(got)
+    np.testing.assert_array_equal(
+        np.concatenate([s for s, _ in src3]), sids)
+
+
+def test_drift_source_is_deterministic_and_bounded():
+    a = list(DriftSource(seed=7, n_sessions=3, batch=12, d=D, n_batches=4))
+    b = list(DriftSource(seed=7, n_sessions=3, batch=12, d=D, n_batches=4))
+    assert len(a) == 4
+    for (sa, xa), (sb, xb) in zip(a, b):
+        np.testing.assert_array_equal(sa, sb)
+        np.testing.assert_array_equal(xa, xb)
+    # and it really is the session_stream generator underneath
+    from repro.data.streams import MixtureSpec, session_stream
+
+    gen = session_stream(7, MixtureSpec(n_components=8, d=D, spread=4.0,
+                                        noise=0.5), 3, 12, as_numpy=True)
+    sg, xg = next(gen)
+    np.testing.assert_array_equal(a[0][0], sg)
+    np.testing.assert_array_equal(a[0][1], xg)
+
+
+def test_subsample_source_thins_in_order():
+    rng = np.random.RandomState(1)
+    sids, X = _tagged(rng, 60, [1, 2])
+    inner = ReplaySource(sids=sids, X=X, batch=16)
+    # rate=1 is the identity
+    full = list(SubsampleSource(inner=inner, rate=1.0, seed=3))
+    np.testing.assert_array_equal(np.concatenate([s for s, _ in full]), sids)
+    # thinned: a deterministic, order-preserving per-session subsequence
+    t1 = list(SubsampleSource(inner=inner, rate=0.4, seed=3))
+    t2 = list(SubsampleSource(inner=inner, rate=0.4, seed=3))
+    s1 = np.concatenate([s for s, _ in t1])
+    x1 = np.concatenate([x for _, x in t1])
+    np.testing.assert_array_equal(s1, np.concatenate([s for s, _ in t2]))
+    assert 0 < len(s1) < len(sids)
+    whole = _per_session(sids, X)
+    for s, xs in _per_session(s1, x1).items():
+        fingerprints = xs[:, 0]
+        ref = whole[s][:, 0]
+        # subsequence: fingerprints appear in ref in the same order
+        idx = np.searchsorted(ref, fingerprints)
+        np.testing.assert_array_equal(ref[idx], fingerprints)
+        assert np.all(np.diff(idx) > 0)
+
+
+# --------------------------------------------------------------------- buffer
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 7))
+def test_buffer_fifo_per_session_across_chunks(seed, get_size):
+    """Lossless regime: whatever the put chunking and get sizing, each
+    session's items come out exactly in the order they went in."""
+    rng = np.random.RandomState(seed)
+    sids, X = _tagged(rng, 50, [3, 4, 5])
+    buf = TaggedBuffer(capacity=128, policy="block")
+    for lo in range(0, 50, 13):  # ragged put chunks
+        buf.put(sids[lo:lo + 13], X[lo:lo + 13])
+    buf.close()
+    out_s, out_x = [], []
+    while True:
+        got = buf.get(get_size)
+        if got is None:
+            break
+        out_s.append(got[0])
+        out_x.append(got[1])
+    out_s = np.concatenate(out_s)
+    out_x = np.concatenate(out_x)
+    assert len(out_s) == 50 and not buf.drop_counts()
+    want = _per_session(sids, X)
+    for s, xs in _per_session(out_s, out_x).items():
+        np.testing.assert_array_equal(xs, want[s])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["drop-oldest",
+                                                "drop-newest"]))
+def test_buffer_drop_policies_preserve_order_and_count(seed, policy):
+    """Clipped regime: survivors of either drop policy are an ordered
+    subsequence per session, and every clipped item is counted against
+    the right session (Stream Clipper's accounting)."""
+    rng = np.random.RandomState(seed)
+    sids, X = _tagged(rng, 60, [1, 2, 3])
+    buf = TaggedBuffer(capacity=16, policy=policy)
+    dropped = 0
+    for lo in range(0, 60, 10):
+        dropped += buf.put(sids[lo:lo + 10], X[lo:lo + 10])
+    buf.close()
+    out_s, out_x = [], []
+    while True:
+        got = buf.get(8)
+        if got is None:
+            break
+        out_s.append(got[0])
+        out_x.append(got[1])
+    out_s = np.concatenate(out_s)
+    out_x = np.concatenate(out_x)
+    drops = buf.drop_counts()
+    assert dropped == sum(drops.values()) == 60 - len(out_s) > 0
+    whole = _per_session(sids, X)
+    for s, xs in _per_session(out_s, out_x).items():
+        ref = whole[s][:, 0]
+        fp = xs[:, 0]
+        idx = np.searchsorted(ref, fp)
+        np.testing.assert_array_equal(ref[idx], fp)  # ordered subsequence
+        assert np.all(np.diff(idx) > 0)
+        lost = len(whole[s]) - len(xs)
+        assert drops.get(s, 0) == lost
+        if policy == "drop-newest" and lost:
+            # survivors are exactly the earliest accepted items
+            assert fp[0] == ref[0]
+
+
+def test_buffer_drop_oldest_clips_the_longest_queue():
+    buf = TaggedBuffer(capacity=4, policy="drop-oldest")
+    buf.put([7, 7, 7, 8], np.arange(4, dtype=np.float32)[:, None])
+    buf.put([8], np.asarray([[9.0]], np.float32))  # clips 7's head
+    assert buf.drop_counts() == {7: 1}
+    s, x = buf.get(8)
+    np.testing.assert_array_equal(sorted(s.tolist()), [7, 7, 8, 8])
+    sev = x[s == 7][:, 0]
+    np.testing.assert_array_equal(sev, [1.0, 2.0])  # head (0.0) clipped
+
+
+def test_buffer_block_policy_backpressure():
+    buf = TaggedBuffer(capacity=4, policy="block")
+    rng = np.random.RandomState(0)
+    sids, X = _tagged(rng, 12, [1, 2])
+    done = []
+
+    def producer():
+        buf.put(sids, X)  # must block until the consumer drains
+        buf.close()
+        done.append(True)
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    out = []
+    while True:
+        got = buf.get(3, timeout=10.0)
+        if got is None:
+            break
+        out.append(got)
+    t.join(timeout=10.0)
+    assert done and sum(len(s) for s, _ in out) == 12
+    assert not buf.drop_counts()  # block never clips
+    # a full buffer with no consumer times out rather than deadlocking
+    buf2 = TaggedBuffer(capacity=2, policy="block")
+    with pytest.raises(TimeoutError):
+        buf2.put(sids, X, timeout=0.05)
+    # an open-but-empty buffer times out on get as well
+    with pytest.raises(TimeoutError):
+        TaggedBuffer(capacity=2).get(1, timeout=0.05)
+
+
+def test_buffer_get_min_items_waits_for_fill():
+    """A trickling producer must not hand the consumer near-empty
+    batches when a fill threshold is set; close still drains the tail."""
+    buf = TaggedBuffer(capacity=16)
+
+    def producer():
+        for i in range(5):
+            buf.put([1], np.asarray([[float(i)]], np.float32))
+        buf.close()
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    s, x = buf.get(4, min_items=4, timeout=10.0)
+    assert len(s) == 4
+    tail = buf.get(4, min_items=4, timeout=10.0)  # closed: drains 1 < 4
+    assert tail is not None and len(tail[0]) == 1
+    assert buf.get(4, min_items=4, timeout=10.0) is None
+    t.join(timeout=10.0)
+
+
+def test_buffer_get_pads_to_fixed_shape():
+    buf = TaggedBuffer(capacity=8)
+    buf.put([5, 5], np.ones((2, 3), np.float32))
+    s, x = buf.get(6, pad_to=6)
+    assert s.shape == (6,) and x.shape == (6, 3)
+    np.testing.assert_array_equal(s[2:], [PAD_SID] * 4)
+    np.testing.assert_array_equal(x[2:], 0.0)
+
+
+# ------------------------------------------------------------------- routing
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_host_route_bit_equals_device_route(seed):
+    """The pipeline's host scatter mirrors ``SummarizerPod.route`` —
+    chunks, counts and both drop counters — including unknown sids,
+    padding and per-session overflow."""
+    rng = np.random.RandomState(seed)
+    pod = _pod(S=4, C=3)
+    state = _admit_all(pod, pod.init(), [10, 11, 12, 13])
+    sids = rng.choice(np.asarray([10, 11, 12, 13, 99, PAD_SID], np.int32),
+                      26).astype(np.int32)
+    X = rng.randn(26, D).astype(np.float32)
+    cj, nj, uj, oj = pod.route(state, jnp.asarray(sids), jnp.asarray(X))
+    ch, nh, uh, oh = host_route(np.asarray(state.sid),
+                                np.asarray(state.active), sids, X, pod.chunk)
+    np.testing.assert_array_equal(np.asarray(cj), ch)
+    np.testing.assert_array_equal(np.asarray(nj), nh)
+    assert int(uj) == int(uh)
+    np.testing.assert_array_equal(np.asarray(oj), oh)
+
+
+# ------------------------------------------------------------------ pipeline
+def _assert_sessions_match_standalone(pod, state, per):
+    feats, n, fval, _, _ = pod.readout(state)
+    algo = pod.algo
+    runb = jax.jit(algo.run_batched)
+    slot_of = {int(s): i for i, s in enumerate(np.asarray(state.sid))}
+    for sid, rows in per.items():
+        i = slot_of[int(sid)]
+        ref = runb(algo.init(), jnp.asarray(np.stack(rows)))
+        rf, rn, rfv = algo.summary(ref)
+        assert int(n[i]) == int(rn), f"session {sid}"
+        np.testing.assert_array_equal(np.asarray(feats[i]), np.asarray(rf),
+                                      err_msg=f"session {sid}")
+
+
+def test_pipeline_bit_equal_to_sync_ingest_loop():
+    """Same stream, two execution strategies: the double-buffered
+    pipeline's final pod state equals the synchronous per-batch
+    ``jit(pod.ingest)`` loop bit for bit."""
+    pod = _pod(S=4, C=16)
+    rng = np.random.RandomState(2)
+    feed = []
+    for _ in range(6):
+        sids, X = _tagged(rng, 32, [10, 11, 12, 13])
+        feed.append((sids, X))
+    st0 = _admit_all(pod, pod.init(), [10, 11, 12, 13])
+
+    ing = jax.jit(pod.ingest)
+    st_sync = st0
+    for sids, X in feed:
+        st_sync, _ = ing(st_sync, jnp.asarray(sids), jnp.asarray(X))
+
+    pipe = IngestPipeline(pod, source=ReplaySource.from_batches(feed),
+                          batch=32)
+    st_pipe, stats = pipe.run(st0)
+    assert stats["batches"] == 6 and stats["items"] == 192
+    for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(st_sync),
+                            jax.tree_util.tree_leaves(st_pipe)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"leaf {jax.tree_util.keystr(pa)} differs")
+
+
+def test_pipeline_repacks_ragged_batches_fifo():
+    """Ragged source batches cross device-batch boundaries; per-session
+    FIFO must survive the repacking (each session bit-equal to its
+    standalone run on the original item order)."""
+    pod = _pod(S=3, C=16)
+    rng = np.random.RandomState(4)
+    sids, X = _tagged(rng, 70, [20, 21, 22])
+    ragged, lo = [], 0
+    for n in (7, 19, 3, 11, 17, 13):  # deliberately unaligned
+        ragged.append((sids[lo:lo + n], X[lo:lo + n]))
+        lo += n
+    st = _admit_all(pod, pod.init(), [20, 21, 22])
+    pipe = IngestPipeline(pod, source=ReplaySource.from_batches(ragged),
+                          batch=16)
+    st, stats = pipe.run(st)
+    assert stats["items"] == 70
+    assert stats["padded"] == (16 - 70 % 16) % 16
+    assert int(jnp.sum(st.items)) == 70
+    _assert_sessions_match_standalone(pod, st, _per_session(sids, X))
+
+
+def test_pipeline_buffer_mode_with_feeder_thread():
+    """Producer thread -> TaggedBuffer -> pipeline: the decoupled path
+    delivers every item, per-session FIFO intact (global interleaving
+    legitimately changes under the fairness rotation)."""
+    pod = _pod(S=3, C=32, T=9)
+    rng = np.random.RandomState(5)
+    sids, X = _tagged(rng, 90, [1, 2, 3])
+    st = _admit_all(pod, pod.init(), [1, 2, 3])
+    buf = TaggedBuffer(capacity=64, policy="block")
+    pipe = IngestPipeline(pod, buffer=buf, batch=32, get_timeout=30.0)
+    pipe.feed_from(ReplaySource(sids=sids, X=X, batch=17))
+    st, stats = pipe.run(st)
+    assert stats["items"] == 90
+    _assert_sessions_match_standalone(pod, st, _per_session(sids, X))
+
+
+def test_pod_serve_drift_loop():
+    """pod.serve(pipeline) drives ingest and interleaves drift checks."""
+    pod = _pod(S=2, C=32, T=5)
+    src = DriftSource(seed=3, n_sessions=2, batch=32, d=D, n_batches=12,
+                      drift_per_batch=0.5)
+    st = _admit_all(pod, pod.init(), [0, 1])
+    pipe = IngestPipeline(pod, source=src, batch=32)
+    st, stats = pod.serve(st, pipe, drift_every=3, min_items=30,
+                          min_rate=0.9)
+    assert pipe.exhausted
+    assert stats["batches"] == 12 and stats["items"] == 12 * 32
+    # the aggressive min_rate forces re-arms through the serve loop
+    assert int(jnp.sum(st.resets)) > 0
+    assert int(jnp.sum(st.items)) == 12 * 32
+
+
+def test_pipeline_surfaces_producer_failure():
+    """A producer that dies mid-stream must raise from run(), not pose
+    as a clean end-of-stream with fewer items."""
+    from repro.ingest import Source
+
+    rng = np.random.RandomState(9)
+    sids, X = _tagged(rng, 8, [1, 2])
+
+    class Boom(Source):
+        def batches(self):
+            yield sids, X
+            raise ConnectionError("wire cut")
+
+    pod = _pod(S=2, C=8)
+    st = _admit_all(pod, pod.init(), [1, 2])
+    buf = TaggedBuffer(capacity=32, policy="block")
+    pipe = IngestPipeline(pod, buffer=buf, batch=8, get_timeout=10.0)
+    pipe.feed_from(Boom())
+    with pytest.raises(RuntimeError, match="producer failed"):
+        pipe.run(st)
+    # drop counters ride along in stats on the healthy path
+    pipe2 = IngestPipeline(pod, source=ReplaySource(sids=sids, X=X, batch=8))
+    _, stats = pipe2.run(st)
+    assert stats["dropped_unknown"] == 0 and stats["dropped_overflow"] == 0
+
+
+def test_pod_serve_respects_max_batches_with_drift():
+    """Regression: with drift_every > max_batches the serve loop ran a
+    full drift window before ever checking the budget."""
+    pod = _pod(S=2, C=32, T=5)
+    src = DriftSource(seed=3, n_sessions=2, batch=32, d=D, n_batches=12)
+    st = _admit_all(pod, pod.init(), [0, 1])
+    pipe = IngestPipeline(pod, source=src, batch=32)
+    st, stats = pod.serve(st, pipe, max_batches=4, drift_every=64,
+                          min_items=10**6, min_rate=0.0)
+    assert stats["batches"] == 4
+    assert int(jnp.sum(st.items)) == 4 * 32
+    # the feed is resumable: a later serve continues where it stopped
+    st, stats = pod.serve(st, pipe, max_batches=None)
+    assert stats["batches"] == 8 and pipe.exhausted
+
+
+# -------------------------------------------------------------------- socket
+@pytest.mark.timeout(60)
+def test_socket_source_roundtrip_localhost():
+    rng = np.random.RandomState(6)
+    frames = [_tagged(rng, n, [1, 2]) for n in (5, 1, 9)]
+    with SocketSource(port=0, timeout=20.0) as src:
+
+        def producer():
+            sock = connect_producer(src.host, src.port, timeout=20.0)
+            for sids, X in frames:
+                send_frame(sock, sids, X)
+            sock.close()
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        got = list(src)
+        t.join(timeout=20.0)
+    assert len(got) == 3
+    for (sa, xa), (sb, xb) in zip(frames, got):
+        np.testing.assert_array_equal(sa, sb)
+        np.testing.assert_array_equal(xa, xb)
+
+
+@pytest.mark.timeout(60)
+def test_socket_source_rejects_oversize_frame():
+    """A corrupt/desynced header announcing a huge payload must be a
+    protocol error, not a multi-GB allocation."""
+    rng = np.random.RandomState(7)
+    sids, X = _tagged(rng, 8, [1], d=16)
+    with SocketSource(port=0, timeout=20.0, max_frame_bytes=256) as src:
+
+        def producer():
+            sock = connect_producer(src.host, src.port, timeout=20.0)
+            try:
+                send_frame(sock, sids, X)  # 8*4 + 8*16*4 bytes > 256
+            finally:
+                sock.close()
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        with pytest.raises(ValueError, match="corrupt or desynced"):
+            next(iter(src))
+        t.join(timeout=20.0)
+
+
+@pytest.mark.timeout(30)
+def test_socket_source_dead_socket_times_out():
+    """CI must never hang on a dead socket: a producer that never
+    connects surfaces as a timeout error, fast."""
+    with SocketSource(port=0, timeout=0.3) as src:
+        with pytest.raises(OSError):  # socket.timeout is a TimeoutError
+            next(iter(src))
+
+
+@pytest.mark.timeout(120)
+def test_socket_to_pod_end_to_end():
+    """The full wire: external producer -> SocketSource -> TaggedBuffer
+    -> IngestPipeline -> pod; summaries bit-equal to standalone."""
+    pod = _pod(S=2, C=32, T=9)
+    rng = np.random.RandomState(8)
+    sids, X = _tagged(rng, 64, [40, 41])
+    st = _admit_all(pod, pod.init(), [40, 41])
+    with SocketSource(port=0, timeout=30.0) as src:
+
+        def producer():
+            sock = connect_producer(src.host, src.port, timeout=30.0)
+            for lo in range(0, 64, 16):
+                send_frame(sock, sids[lo:lo + 16], X[lo:lo + 16])
+            sock.close()
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        buf = TaggedBuffer(capacity=256, policy="block")
+        pipe = IngestPipeline(pod, buffer=buf, batch=32, get_timeout=30.0)
+        pipe.feed_from(src)
+        st, stats = pod.serve(st, pipe)
+        t.join(timeout=30.0)
+    assert stats["items"] == 64
+    _assert_sessions_match_standalone(pod, st, _per_session(sids, X))

@@ -52,9 +52,10 @@ def test_route_scatter_fixed_shape():
     np.testing.assert_array_equal(np.asarray(chunks[1, :2, 0]), [1.0, 6.0])
     np.testing.assert_array_equal(np.asarray(counts), [4, 2, 0])
     # the two drop causes are counted apart: the unknown sid 99 (a
-    # routing error) vs the overflow item 8 (backpressure); queue
-    # padding (-1) is neither
-    assert int(unknown) == 1 and int(overflow) == 1
+    # routing error) vs the overflow item 8 (backpressure, charged to
+    # session 10's slot); queue padding (-1) is neither
+    assert int(unknown) == 1
+    np.testing.assert_array_equal(np.asarray(overflow), [1, 0, 0])
 
 
 def test_route_ignores_stale_sid_on_freed_slot():
@@ -65,7 +66,7 @@ def test_route_ignores_stale_sid_on_freed_slot():
     X = jnp.ones((2, 2), jnp.float32)
     _, counts, unknown, overflow = pod.route(state, sids, X)
     np.testing.assert_array_equal(np.asarray(counts), [0, 1])
-    assert int(unknown) == 1 and int(overflow) == 0
+    assert int(unknown) == 1 and int(jnp.sum(overflow)) == 0
 
 
 # ----------------------------------------------------------------- lifecycle
@@ -116,7 +117,7 @@ def test_drift_check_resets_collapsed_sessions():
     assert bool(jnp.all(mask == st.active))
     np.testing.assert_array_equal(np.asarray(st2.resets),
                                   np.asarray(mask, np.int32))
-    _, n, _, _ = pod.readout(st2)
+    _, n, _, _, _ = pod.readout(st2)
     assert int(jnp.sum(n)) == 0  # re-armed summaries are empty
     # lifetime counters survive the reset, the window does not
     np.testing.assert_array_equal(np.asarray(st2.items), np.asarray(st.items))
@@ -147,7 +148,7 @@ def test_pod64_lifecycle_bit_equal_to_standalone():
             per_round[s][rnd] = X[sids == s]
         st, stats = ing(st, jnp.asarray(sids), jnp.asarray(X))
         assert int(stats["dropped_unknown"][0]) == 0
-        assert int(stats["dropped_overflow"][0]) == 0
+        assert int(jnp.sum(stats["dropped_overflow"])) == 0
         if rnd == RESET_AT - 1:
             # summaries saturate fast here, so the windowed accept rate
             # has collapsed for most sessions — the monitor re-arms them
@@ -160,8 +161,10 @@ def test_pod64_lifecycle_bit_equal_to_standalone():
             st, extra = pod.restore(store)
             assert extra["round"] == rnd
 
-    feats, n, fval, active = pod.readout(st)
+    feats, n, fval, active, drops = pod.readout(st)
     assert bool(jnp.all(active))
+    assert int(drops["unknown"]) == 0
+    assert int(jnp.sum(drops["overflow"])) == 0
 
     # one fixed-shape jitted reference for all sessions: pad each
     # session's (post-reset) stream to a common length, mask via n_valid
@@ -248,6 +251,22 @@ def test_sharded_update_matches_local():
     np.testing.assert_array_equal(np.asarray(stats_local["counts"]),
                                   np.asarray(stats_shard["counts"]))
 
+    # the pre-routed variant (the ingest pipeline's device program):
+    # host-routed chunks in, identical state out
+    from repro.ingest import host_route
+
+    chunks, counts, unknown, overflow = host_route(
+        np.asarray(st.sid), np.asarray(st.active), np.asarray(sids),
+        np.asarray(X), pod.chunk)
+    upd_pre = pod.make_sharded_update(mesh, pre_routed=True)
+    with mesh:
+        st_pre, stats_pre = jax.jit(upd_pre)(
+            st, jnp.asarray(chunks), jnp.asarray(counts),
+            jnp.asarray(unknown)[None], jnp.asarray(overflow))
+    _tree_equal(st_local, st_pre)
+    np.testing.assert_array_equal(np.asarray(stats_local["counts"]),
+                                  np.asarray(stats_pre["counts"]))
+
 
 # --------------------------------------------------- other family members fit
 @pytest.mark.parametrize("name", ["sievestreaming++", "salsa"])
@@ -265,7 +284,7 @@ def test_pod_hosts_stacked_sieves(name):
         for sid, x in zip(sids, X):
             per[int(sid)].append(x)
         st, _ = ing(st, jnp.asarray(sids), jnp.asarray(X))
-    feats, n, fval, _ = pod.readout(st)
+    feats, n, fval, _, _ = pod.readout(st)
     for i, sid in enumerate((5, 6, 7)):
         ref = jax.jit(algo.run_batched)(algo.init(),
                                         jnp.asarray(np.stack(per[sid])))
@@ -303,6 +322,149 @@ def test_accept_counters_monotone_for_stacked_sieves():
     for X in (corr, ortho):
         ref = jax.jit(algo.run_batched)(ref, jnp.asarray(X))
     assert int(st.accepts[0]) == int(algo.insertions(ref))
+
+
+def test_pod_hosts_quickstream_tenants():
+    """The ring-buffer baseline joins the pod through the ragged-chunk
+    contract (``run_batched(state, X, n_valid)`` + monotone
+    ``insertions``): every session bit-equal to standalone."""
+    algo = make("quickstream", K=4, d=5, lengthscale=1.5)
+    pod = SummarizerPod(algo=algo, sessions=3, chunk=16)
+    rng = np.random.RandomState(11)
+    st = _admit_all(pod, pod.init(), [5, 6, 7])
+    ing = jax.jit(pod.ingest)
+    per = {s: [] for s in (5, 6, 7)}
+    for _ in range(5):
+        sids = rng.choice([5, 6, 7], 12).astype(np.int32)
+        X = (rng.randn(12, 5) * 2).astype(np.float32)
+        for sid, x in zip(sids, X):
+            per[int(sid)].append(x)
+        st, _ = ing(st, jnp.asarray(sids), jnp.asarray(X))
+    feats, n, fval, _, _ = pod.readout(st)
+    assert bool(jnp.all(st.accepts >= 0))
+    for i, sid in enumerate((5, 6, 7)):
+        ref = jax.jit(algo.run_batched)(algo.init(),
+                                        jnp.asarray(np.stack(per[sid])))
+        rf, rn, rfv = algo.summary(ref)
+        assert int(n[i]) == int(rn)
+        np.testing.assert_array_equal(np.asarray(feats[i]), np.asarray(rf))
+        np.testing.assert_array_equal(np.asarray(fval[i]), np.asarray(rfv))
+        assert int(st.accepts[i]) == int(algo.insertions(ref))
+
+
+def test_drop_ledgers_accumulate_and_reset_on_admit():
+    """ingest() returns what route() counts (regression: the counters
+    were computed then discarded) and the PodState ledgers accumulate;
+    readout surfaces them; a recycled slot starts with a clean
+    per-session overflow ledger while the pod-scoped unknown ledger
+    survives."""
+    pod = _pod(S=2, C=2, d=6)
+    st = _admit_all(pod, pod.init(), [1, 2])
+    ing = jax.jit(pod.ingest)
+    rng = np.random.RandomState(0)
+    #                 s1 s1 s1(over) s1(over) s2  99(unknown)
+    sids = jnp.asarray([1, 1, 1, 1, 2, 99], jnp.int32)
+    X = jnp.asarray(rng.randn(6, 6).astype(np.float32))
+    st, stats = ing(st, sids, X)
+    np.testing.assert_array_equal(np.asarray(stats["dropped_overflow"]),
+                                  [2, 0])
+    assert int(stats["dropped_unknown"][0]) == 1
+    st, stats = ing(st, sids, X)
+    _, _, _, _, drops = pod.readout(st)
+    np.testing.assert_array_equal(np.asarray(drops["overflow"]), [4, 0])
+    assert int(drops["unknown"]) == 2
+    # recycle slot 0: session ledger resets, pod ledger survives
+    st = pod.evict(st, jnp.int32(1))
+    st, slot, ok = pod.admit(st, jnp.int32(3))
+    assert bool(ok) and int(slot) == 0
+    _, _, _, _, drops = pod.readout(st)
+    np.testing.assert_array_equal(np.asarray(drops["overflow"]), [0, 0])
+    assert int(drops["unknown"]) == 2
+
+
+def test_restore_slot_subset_into_live_pod():
+    """Pod-autoscaling prerequisite: restore a *subset* of a saved pod's
+    session rows into the free slots of a live pod, bit-equal, without
+    touching the resident tenants — then both continue correctly."""
+    pod = _pod(S=4, C=8, K=4, d=5)
+    algo = pod.algo
+    rng = np.random.RandomState(3)
+    stA = _admit_all(pod, pod.init(), [100, 101, 102, 103])
+    ing = jax.jit(pod.ingest)
+    per = {s: [] for s in (100, 101, 102, 103)}
+    for _ in range(6):
+        sids = rng.randint(100, 104, 16).astype(np.int32)
+        X = (rng.randn(16, 5) * 2).astype(np.float32)
+        for sid, x in zip(sids, X):
+            per[int(sid)].append(x)
+        stA, _ = ing(stA, jnp.asarray(sids), jnp.asarray(X))
+    store = CheckpointStore(_tmp_dir())
+    pod.save(store, 1, stA, {"pod": "A"})
+
+    # pod B is wider, hosts one resident tenant of its own
+    podB = dataclasses.replace(pod, sessions=6)
+    stB = _admit_all(podB, podB.init(), [500])
+    ingB = jax.jit(podB.ingest)
+    resB = []
+    for _ in range(2):
+        X = (rng.randn(4, 5) * 2).astype(np.float32)
+        resB.append(X)
+        stB, _ = ingB(stB, jnp.asarray([500] * 4, dtype=jnp.int32),
+                      jnp.asarray(X))
+    before_resident = jax.tree_util.tree_map(
+        lambda l: np.asarray(l)[0], stB)
+
+    merged, extra = podB.restore(store, slots=np.asarray([1, 3]), into=stB,
+                                 saved_sessions=4)
+    assert extra == {"pod": "A"}
+    np.testing.assert_array_equal(np.asarray(merged.sid),
+                                  [500, 101, 103, -1, -1, -1])
+    # migrated rows are bit-equal to the saved pod's rows
+    for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(stA),
+                            jax.tree_util.tree_leaves(merged)):
+        np.testing.assert_array_equal(
+            np.asarray(la)[[1, 3]], np.asarray(lb)[[1, 2]],
+            err_msg=f"leaf {jax.tree_util.keystr(pa)} differs")
+    # the resident tenant's row is untouched
+    for (pa, la), lb in zip(
+            jax.tree_util.tree_leaves_with_path(before_resident),
+            jax.tree_util.tree_leaves(merged)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb)[0],
+            err_msg=f"leaf {jax.tree_util.keystr(pa)} differs")
+
+    # migrated sessions continue bit-equal to standalone run_batched
+    extra_items = {101: [], 103: []}
+    for _ in range(3):
+        sids = np.asarray([101, 103] * 4, np.int32)
+        X = (rng.randn(8, 5) * 2).astype(np.float32)
+        for sid, x in zip(sids, X):
+            extra_items[int(sid)].append(x)
+        merged, _ = ingB(merged, jnp.asarray(sids), jnp.asarray(X))
+    feats, n, fval, active, _ = podB.readout(merged)
+    for sid, slot in ((101, 1), (103, 2)):
+        Xs = jnp.asarray(np.stack(per[sid] + extra_items[sid]))
+        ref = jax.jit(algo.run_batched)(algo.init(), Xs)
+        rf, rn, rfv = algo.summary(ref)
+        assert int(n[slot]) == int(rn), f"session {sid}"
+        np.testing.assert_array_equal(np.asarray(feats[slot]),
+                                      np.asarray(rf))
+
+    # a duplicated slot index must not double-host the session
+    st_dup = _admit_all(podB, podB.init(), [500])
+    dup, _ = podB.restore(store, slots=np.asarray([2, 2, 2]), into=st_dup,
+                          saved_sessions=4)
+    assert int(jnp.sum(dup.sid == 102)) == 1
+    assert int(jnp.sum(dup.active)) == 2
+
+    # a clashing restore (101 already live) must refuse
+    with pytest.raises(ValueError, match="already live"):
+        podB.restore(store, slots=np.asarray([1]), into=merged,
+                     saved_sessions=4)
+    # bool-mask selection + free-slot shortage must refuse
+    with pytest.raises(ValueError, match="free slots"):
+        full = _admit_all(pod, pod.init(), [900, 901, 902, 903])
+        pod.restore(store, slots=np.ones(4, bool), into=full)
 
 
 def test_admit_rejects_negative_session_id():
