@@ -105,8 +105,9 @@ def bench_ingest(S: int, *, K: int, d: int, chunk: int, iters: int,
                 st_pipe = st
 
     # identical stream -> bit-equal summaries, or the overlap is a bug
-    fa, na, va, _, _ = pod.readout(st_sync)
-    fb, nb, vb, _, _ = pod.readout(st_pipe)
+    ra, rb = pod.readout(st_sync), pod.readout(st_pipe)
+    fa, na, va = ra.feats, ra.n, ra.fval
+    fb, nb, vb = rb.feats, rb.n, rb.fval
     bit_equal = (np.array_equal(np.asarray(fa), np.asarray(fb))
                  and np.array_equal(np.asarray(na), np.asarray(nb))
                  and np.array_equal(np.asarray(va), np.asarray(vb))

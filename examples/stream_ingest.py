@@ -59,7 +59,8 @@ pipe.feed_from(src)
 state, stats = pod.serve(state, pipe, drift_every=10,
                          min_items=500, min_rate=0.02)
 
-feats, n, fval, active, drops = pod.readout(state)
+ro = pod.readout(state)
+feats, n, fval, active, drops = ro.feats, ro.n, ro.fval, ro.active, ro.drops
 print(f"served {stats['items']} items in {stats['batches']} device batches "
       f"({stats['items'] / stats['wall_s']:.0f} items/s); "
       f"dropped: unknown={int(drops['unknown'])} "

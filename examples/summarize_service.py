@@ -2,9 +2,14 @@
 
 Eight tenants stream embeddings through one tagged queue; the pod hosts
 every session as one stacked device-resident state and advances them all
-in a single jitted program.  The driver exercises the full session
-lifecycle: admit, stream, drift-triggered reset, periodic readout, evict
-+ slot reuse, and checkpoint/restore mid-stream.
+in a single jitted program.  Tenants buy DIFFERENT budgets: half are on
+the pod-default plan, the rest bring their own ``SessionSpec`` (K/T/eps)
+— a "small" plan (K=4, coarse ladder) and a "pro" plan (K=16, fine
+ladder) — all sharing the same compiled program via per-slot traced
+hyperparams (DESIGN.md §9).  The driver exercises the full session
+lifecycle: admit (mixed specs), stream, drift-triggered reset (which
+keeps each tenant's budget), periodic readout incl. the per-slot spec
+rows, evict + slot reuse, and checkpoint/restore mid-stream.
 
     PYTHONPATH=src python examples/summarize_service.py
 """
@@ -15,25 +20,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import CheckpointStore
-from repro.core.api import make
+from repro.core import SessionSpec, make
 from repro.data import MixtureSpec, session_stream
 from repro.serve import SummarizerPod
 
-S, K, D, CHUNK = 8, 16, 32, 64
+S, K_MAX, D, CHUNK = 8, 16, 32, 64
 ROUNDS = 30
 
-algo = make("threesieves", K=K, d=D, T=200, eps=1e-2, lengthscale=2.0)
+# the pod is sized for its biggest plan: K_MAX buffer rows, finest ladder
+pod_spec = SessionSpec(algo="threesieves", K=K_MAX, d=D, T=200, eps=1e-2,
+                       lengthscale=2.0)
+algo = make(pod_spec)
 pod = SummarizerPod(algo=algo, sessions=S, chunk=CHUNK)
 state = pod.init()
 
-admit = jax.jit(pod.admit)
+PLANS = {
+    "default": None,  # pod spec: K=16, T=200, eps=1e-2
+    "small": pod_spec.replace(K=4, T=100, eps=5e-2),
+    "pro": pod_spec.replace(K=16, T=400, eps=1e-2),
+}
+
 ingest = jax.jit(pod.ingest)
 drift = jax.jit(lambda s: pod.drift_check(s, min_items=500, min_rate=0.02))
 
-print(f"pod: {S} slots, K={K}, d={D}; admitting tenants 100..{100 + S - 1}")
-for sid in range(100, 100 + S):
-    state, slot, ok = admit(state, jnp.int32(sid))
+print(f"pod: {S} slots, K_max={K_MAX}, d={D}; admitting tenants "
+      f"100..{100 + S - 1} on mixed plans")
+plan_of = {}
+for i, sid in enumerate(range(100, 100 + S)):
+    plan = list(PLANS)[i % len(PLANS)]
+    plan_of[sid] = plan
+    state, slot, ok = pod.admit(state, jnp.int32(sid), spec=PLANS[plan])
     assert bool(ok)
+    print(f"  tenant {sid}: plan={plan:8s} -> slot {int(slot)}")
 
 stream = session_stream(0, MixtureSpec(n_components=6, d=D, spread=5.0),
                         S, batch=S * CHUNK // 2,
@@ -46,31 +64,36 @@ for rnd in range(ROUNDS):
     state, stats = ingest(state, sids, X)
     if rnd % 10 == 9:
         state, reset = drift(state)
-        feats, n, fval, active, drops = pod.readout(state)
+        ro = pod.readout(state)
         n_reset = int(jnp.sum(reset))
         print(f"round {rnd + 1:3d}: items/session="
               f"{np.asarray(state.items).mean():7.1f}  mean f(S)="
-              f"{float(jnp.mean(jnp.where(active, fval, 0.0))):6.3f}  "
+              f"{float(jnp.mean(jnp.where(ro.active, ro.fval, 0.0))):6.3f}  "
               f"drift-resets={n_reset}")
         pod.save(store, rnd + 1, state, {"round": rnd + 1})
 
-# evict one tenant, admit a new one into the recycled slot
+# evict one tenant, admit a new "small"-plan one into the recycled slot
 state = pod.evict(state, jnp.int32(100))
-state, slot, ok = admit(state, jnp.int32(999))
-print(f"evicted tenant 100; tenant 999 admitted into recycled slot "
-      f"{int(slot)} (ok={bool(ok)})")
+state, slot, ok = pod.admit(state, jnp.int32(999), spec=PLANS["small"])
+plan_of[999] = "small"
+print(f"evicted tenant 100; tenant 999 (small plan) admitted into "
+      f"recycled slot {int(slot)} (ok={bool(ok)})")
 
-# restore the pod mid-stream (e.g. on a new host) and keep going
+# restore the pod mid-stream (e.g. on a new host) and keep going — the
+# per-slot budgets are state and travel with the checkpoint
 restored, extra = pod.restore(store)
 print(f"restored checkpoint of round {extra['round']}; continuing")
 sids, X = next(stream)
 restored, _ = ingest(restored, sids, X)
 
-feats, n, fval, active, drops = pod.readout(restored)
+ro = pod.readout(restored)
 print(f"final per-session summaries (restored pod); dropped: "
-      f"unknown={int(drops['unknown'])} "
-      f"overflow={int(jnp.sum(drops['overflow']))}")
+      f"unknown={int(ro.drops['unknown'])} "
+      f"overflow={int(jnp.sum(ro.drops['overflow']))}")
 for s in range(S):
-    print(f"  slot {s}: sid={int(restored.sid[s]):4d} "
-          f"selected={int(n[s]):3d}  f(S)={float(fval[s]):6.3f}  "
+    sid = int(restored.sid[s])
+    print(f"  slot {s}: sid={sid:4d} plan={plan_of.get(sid, '?'):8s} "
+          f"K={int(ro.specs.k_cap[s]):3d} T={int(ro.specs.T[s]):4d} "
+          f"eps={float(ro.specs.eps[s]):.3f}  "
+          f"selected={int(ro.n[s]):3d}  f(S)={float(ro.fval[s]):6.3f}  "
           f"resets={int(restored.resets[s])}")

@@ -1,6 +1,6 @@
 """repro.core — streaming submodular function maximization (the paper's
 contribution) as composable JAX modules."""
-from .api import ALGORITHMS, SIEVE_FAMILY, make, make_objective
+from .api import ALGORITHMS, SIEVE_FAMILY, algo_name, make, make_objective
 from .functions import (KernelConfig, LogDet, LogDetState, naive_logdet,
                         rbf_lengthscale_batch, rbf_lengthscale_stream)
 from .greedy import Greedy
@@ -9,15 +9,17 @@ from .salsa import Salsa
 from .sieve_family import (SieveAlgorithm, StackedSieve, residual_threshold,
                            stack_states)
 from .sieves import SieveStreaming, SieveState, sieve_streaming_pp
+from .spec import HyperParams, SessionSpec
 from .threesieves import ThreeSieves, TSState
-from .thresholds import Ladder
+from .thresholds import Ladder, TracedLadder
 
 __all__ = [
-    "ALGORITHMS", "SIEVE_FAMILY", "make", "make_objective",
+    "ALGORITHMS", "SIEVE_FAMILY", "algo_name", "make", "make_objective",
     "KernelConfig", "LogDet", "LogDetState", "naive_logdet",
     "rbf_lengthscale_batch", "rbf_lengthscale_stream",
     "GainOracle", "Greedy", "Salsa",
     "SieveAlgorithm", "StackedSieve", "residual_threshold", "stack_states",
     "SieveStreaming", "SieveState", "sieve_streaming_pp",
-    "ThreeSieves", "TSState", "Ladder",
+    "HyperParams", "SessionSpec",
+    "ThreeSieves", "TSState", "Ladder", "TracedLadder",
 ]

@@ -12,19 +12,22 @@ Every algorithm exposes the uniform protocol::
 
 The sieve family (threesieves, sievestreaming, sievestreaming++, salsa)
 implements ``run_batched`` as a fused-oracle fast path — one batched gain
-pass per state change (see ``sieve_family``); the remaining baselines alias
-it to ``run``.
+pass per state change (see ``sieve_family``) — and additionally carries its
+(K, T, eps) as traced state: ``algo.init(algo.hyper(K=..., T=..., eps=...))``
+runs a smaller budget through the same compiled program (DESIGN.md §9).
+The remaining baselines alias ``run_batched`` to ``run``.
 
-``make(name, K, d, ...)`` builds an algorithm bound to the paper's LogDet
-objective with the paper's kernel conventions.  ``backend`` selects the
-marginal-gain oracle implementation (``jnp`` | ``pallas`` |
-``pallas-interpret`` | ``auto``); ``None`` defers to the
-``REPRO_ORACLE_BACKEND`` env var, else ``auto`` (fused Pallas kernel on
-TPU, jnp elsewhere).
+``make(spec)`` with a ``SessionSpec`` is the canonical constructor; the
+kwarg form ``make(name, K, d, ...)`` is kept as a thin shim over it.  Both
+build an algorithm bound to the paper's LogDet objective with the paper's
+kernel conventions.  ``backend`` selects the marginal-gain oracle
+implementation (``jnp`` | ``pallas`` | ``pallas-interpret`` | ``auto``);
+``None`` defers to the ``REPRO_ORACLE_BACKEND`` env var, else ``auto``
+(fused Pallas kernel on TPU, jnp elsewhere).
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Union
 
 from .baselines import (IndependentSetImprovement, PreemptionStreaming,
                         QuickStream, RandomReservoir)
@@ -32,22 +35,30 @@ from .functions import KernelConfig, LogDet, rbf_lengthscale_batch
 from .greedy import Greedy
 from .salsa import Salsa
 from .sieves import SieveStreaming
+from .spec import SessionSpec
 from .threesieves import ThreeSieves
 
-ALGORITHMS = (
-    "threesieves",
-    "sievestreaming",
-    "sievestreaming++",
-    "salsa",
-    "random",
-    "independentsetimprovement",
-    "preemptionstreaming",
-    "quickstream",
-    "greedy",
-)
+# name -> constructor(f, spec): the single registry ``ALGORITHMS``,
+# ``make`` and (inverted) ``algo_name`` all derive from
+_CONSTRUCTORS = {
+    "threesieves": lambda f, s: ThreeSieves(f=f, T=s.T, eps=s.eps),
+    "sievestreaming": lambda f, s: SieveStreaming(f=f, eps=s.eps,
+                                                  plus_plus=False),
+    "sievestreaming++": lambda f, s: SieveStreaming(f=f, eps=s.eps,
+                                                    plus_plus=True),
+    "salsa": lambda f, s: Salsa(f=f, eps=s.eps),
+    "random": lambda f, s: RandomReservoir(f=f),
+    "independentsetimprovement": lambda f, s: IndependentSetImprovement(f=f),
+    "preemptionstreaming": lambda f, s: PreemptionStreaming(f=f),
+    "quickstream": lambda f, s: QuickStream(f=f, c=s.c),
+    "greedy": lambda f, s: Greedy(f=f),
+}
 
-# the members of the sieve family: share the threshold-ladder accept rule and
-# a fused-oracle ``run_batched`` fast path (DESIGN.md §4)
+ALGORITHMS = tuple(_CONSTRUCTORS)
+
+# the members of the sieve family: share the threshold-ladder accept rule,
+# a fused-oracle ``run_batched`` fast path (DESIGN.md §4) and traced
+# per-instance hyperparams (DESIGN.md §9)
 SIEVE_FAMILY = (
     "threesieves",
     "sievestreaming",
@@ -68,29 +79,76 @@ def make_objective(K: int, d: int, a: float = 1.0,
                   backend=backend)
 
 
-def make(name: str, K: int, d: int, *, a: float = 1.0,
+def algo_name(algo: Any) -> str:
+    """Canonical registry name of an algorithm instance (the inverse of
+    ``make`` — what a ``SessionSpec.algo`` must match to target it).
+
+    Derived from the constructor registry: each entry is instantiated on
+    a throwaway objective and matched by type + the fields that
+    distinguish registry entries of the same class (SieveStreaming vs
+    ++), so a new ``_CONSTRUCTORS`` entry is reverse-mapped for free.
+    """
+    for name, probe in _REGISTRY_PROBES().items():
+        if type(algo) is type(probe) and all(
+                getattr(algo, f) == getattr(probe, f)
+                for f in _DISTINGUISHING.get(type(probe).__name__, ())):
+            return name
+    raise ValueError(f"unknown algorithm instance {type(algo).__name__}")
+
+
+# fields that tell registry entries of the SAME class apart
+_DISTINGUISHING = {"SieveStreaming": ("plus_plus",)}
+
+
+def _REGISTRY_PROBES():
+    """One throwaway instance per registry entry (memoized)."""
+    global _PROBES
+    if _PROBES is None:
+        spec = SessionSpec(K=1, d=1)
+        f = LogDet(K=1, d=1)
+        _PROBES = {name: ctor(f, spec)
+                   for name, ctor in _CONSTRUCTORS.items()}
+    return _PROBES
+
+
+_PROBES = None
+
+
+_ALIASES = {
+    "sievestreamingpp": "sievestreaming++",
+    "isi": "independentsetimprovement",
+    "preemption": "preemptionstreaming",
+}
+
+
+def make(spec: Union[SessionSpec, str], K: int | None = None,
+         d: int | None = None, *, a: float = 1.0,
          lengthscale: float | None = None, eps: float = 0.1, T: int = 500,
          c: int = 4, kernel_kind: str = "rbf",
          backend: str | None = None) -> Any:
-    f = make_objective(K, d, a=a, lengthscale=lengthscale,
-                       kernel_kind=kernel_kind, backend=backend)
-    name = name.lower()
-    if name == "threesieves":
-        return ThreeSieves(f=f, T=T, eps=eps)
-    if name == "sievestreaming":
-        return SieveStreaming(f=f, eps=eps, plus_plus=False)
-    if name in ("sievestreaming++", "sievestreamingpp"):
-        return SieveStreaming(f=f, eps=eps, plus_plus=True)
-    if name == "salsa":
-        return Salsa(f=f, eps=eps)
-    if name == "random":
-        return RandomReservoir(f=f)
-    if name in ("independentsetimprovement", "isi"):
-        return IndependentSetImprovement(f=f)
-    if name in ("preemptionstreaming", "preemption"):
-        return PreemptionStreaming(f=f)
-    if name == "quickstream":
-        return QuickStream(f=f, c=c)
-    if name == "greedy":
-        return Greedy(f=f)
-    raise ValueError(f"unknown algorithm {name!r}; choose from {ALGORITHMS}")
+    """Build an algorithm from a ``SessionSpec`` (canonical) or from the
+    legacy kwarg form ``make(name, K, d, ...)`` (a shim over the spec).
+    """
+    if isinstance(spec, SessionSpec):
+        if K is not None or d is not None:
+            raise TypeError("make(spec) takes no positional K/d — put them "
+                            "in the SessionSpec")
+    else:
+        if K is None or d is None:
+            raise TypeError("make(name, K, d, ...) requires K and d")
+        spec = SessionSpec(algo=str(spec), K=K, d=d, a=a,
+                           lengthscale=lengthscale, eps=eps, T=T, c=c,
+                           kernel_kind=kernel_kind, backend=backend)
+    if spec.d is None:
+        raise ValueError("SessionSpec.d is required to construct an "
+                         "algorithm (admission specs may omit it; "
+                         "construction cannot)")
+
+    name = _ALIASES.get(spec.algo.lower(), spec.algo.lower())
+    if name not in _CONSTRUCTORS:
+        raise ValueError(f"unknown algorithm {spec.algo!r}; choose from "
+                         f"{ALGORITHMS}")
+    f = make_objective(spec.K, spec.d, a=spec.a,
+                       lengthscale=spec.lengthscale,
+                       kernel_kind=spec.kernel_kind, backend=spec.backend)
+    return _CONSTRUCTORS[name](f, spec)

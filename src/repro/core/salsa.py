@@ -15,7 +15,12 @@ the paper's measurement that Salsa uses the most memory.
 
 Execution paths (per-item ``run`` and the chunked ``run_batched`` fast
 path) derive from the shared ``StackedSieve`` engine (DESIGN.md §4): the
-rule/rung instances are one stacked axis of NUM_RULES * num_rungs states.
+rule/rung instances are one stacked axis of NUM_RULES * rung_cap states.
+
+(K, eps) are traced state (``SieveState.hp``, shared with the sieves
+module): each rule's rung block is masked to the session's live ladder
+prefix, so per-tenant budgets ride the same compiled program
+(DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -27,6 +32,8 @@ import jax.numpy as jnp
 
 from .sieve_family import StackedSieve, residual_threshold, stack_states
 from .sieves import SieveState
+from .spec import HyperParams
+from .thresholds import TracedLadder
 
 Array = jax.Array
 
@@ -37,45 +44,53 @@ NUM_RULES = 3
 class Salsa(StackedSieve):
     @property
     def n_instances(self) -> int:
-        return NUM_RULES * self.ladder.num_rungs
+        return NUM_RULES * self.rung_cap
 
-    def init(self) -> SieveState:
+    def init(self, hyper: HyperParams | None = None) -> SieveState:
         n_inst = self.n_instances
+        hp = self.default_hyper() if hyper is None else hyper
+        valid = jnp.tile(TracedLadder.of(hp).valid(self.rung_cap), NUM_RULES)
         return SieveState(
             lds=stack_states(self.f.init(), n_inst),
-            alive=jnp.ones((n_inst,), bool),
-            lb=jnp.zeros((), jnp.float32),
+            alive=valid,
+            lb=jnp.zeros((), self.f.dtype),
             n_queries=jnp.zeros((), jnp.int32),
             peak_mem=jnp.zeros((), jnp.int32),
+            hp=hp,
         )
 
     # ------------------------------------------------- per-item decision parts
     def _thresholds(self, state: SieveState) -> Array:
         """(n_inst,) acceptance thresholds given per-instance f and |S|."""
         fvals, ns = state.lds.fval, state.lds.n
-        nv = self.ladder.num_rungs
-        vs = jnp.tile(self.ladder.values(), NUM_RULES)  # (n_inst,)
+        nv = self.rung_cap
+        k_cap = state.hp.k_cap
+        vals = TracedLadder.of(state.hp).values(nv, self.f.dtype)
+        vs = jnp.tile(vals, NUM_RULES)  # (n_inst,)
         rule = jnp.repeat(jnp.arange(NUM_RULES), nv)
-        thr0 = residual_threshold(vs / 2.0, fvals, ns, self.f.K)
-        thr1 = jnp.broadcast_to(vs / (2.0 * self.f.K), fvals.shape)
-        thr2 = residual_threshold(2.0 * vs / 3.0, fvals, ns, self.f.K)
+        thr0 = residual_threshold(vs / 2.0, fvals, ns, k_cap)
+        thr1 = jnp.broadcast_to(vs / (2.0 * k_cap.astype(vs.dtype)),
+                                fvals.shape)
+        thr2 = residual_threshold(2.0 * vs / 3.0, fvals, ns, k_cap)
         return jnp.select([rule == 0, rule == 1, rule == 2], [thr0, thr1, thr2])
 
     def _can_accept(self, state: SieveState) -> Array:
-        return state.lds.n < self.f.K
+        # ``alive`` is the (static-shape) validity mask of the session's
+        # ladder prefix — dead tail instances must never accept
+        return state.alive & (state.lds.n < state.hp.k_cap)
 
     def _apply_item(self, state: SieveState, x: Array,
                     takes: Array) -> SieveState:
         f = self.f
         lds = jax.vmap(lambda ld, take: f.maybe_append(ld, x, take))(
             state.lds, takes)
-        nq = state.n_queries + self.n_instances
+        nq = state.n_queries + jnp.sum(state.alive.astype(jnp.int32))
         peak = jnp.maximum(state.peak_mem, jnp.sum(lds.n))
         return SieveState(lds=lds, alive=state.alive, lb=state.lb,
-                          n_queries=nq, peak_mem=peak)
+                          n_queries=nq, peak_mem=peak, hp=state.hp)
 
     def _bulk_reject(self, state: SieveState, r: Array) -> SieveState:
-        nq = state.n_queries + r * self.n_instances
+        nq = state.n_queries + r * jnp.sum(state.alive.astype(jnp.int32))
         peak = jnp.maximum(state.peak_mem, jnp.sum(state.lds.n))
         return dataclasses.replace(state, n_queries=nq, peak_mem=peak)
 

@@ -33,17 +33,20 @@ import jax
 import jax.numpy as jnp
 
 from .functions import LogDet, LogDetState
+from .spec import HyperParams
 from .thresholds import Ladder
 
 Array = jax.Array
 
 
-def residual_threshold(target, fval, n, K: int):
+def residual_threshold(target, fval, n, K):
     """(target - f(S)) / max(K - |S|, 1) — the family's accept bar.
 
     ``target`` is the rung-dependent numerator (v/2 for the SieveStreaming
     rule, 2v/3 for Salsa's eager rule, ...); broadcasts over stacked
-    instances.
+    instances.  ``K`` is the summary budget — a Python int for the static
+    path or a traced () int32 (``HyperParams.k_cap``) for per-session
+    budgets; either broadcasts the same way.
     """
     denom = jnp.maximum(K - n, 1).astype(fval.dtype)
     return (target - fval) / denom
@@ -78,6 +81,13 @@ class SieveAlgorithm:
     Subclasses implement ``step`` (one stream item) and may override
     ``run_batched`` with a fast path; the default chunk paths here are
     semantically exact by construction.
+
+    The dataclass fields are *capacities and defaults*: ``f.K`` sizes the
+    summary buffers (K_max rows), ``eps`` (and ThreeSieves' ``T``) fill a
+    default ``HyperParams`` and size the stacked rung axes.  The effective
+    (K, T, eps) of a run live in the state (``state.hp``), so one traced
+    program serves heterogeneous budgets — ``init(hyper)`` with a
+    ``hyper(K=..., T=..., eps=...)`` row selects them per instance.
     """
 
     f: LogDet
@@ -85,9 +95,40 @@ class SieveAlgorithm:
 
     @property
     def ladder(self) -> Ladder:
+        """Static ladder of the DEFAULT hyperparams — sizes the stacked
+        instance axes (the rung capacity) and validates eps/K eagerly."""
         return Ladder(eps=self.eps, m=self.f.singleton_value, K=self.f.K)
 
-    def init(self):
+    def default_hyper(self) -> HyperParams:
+        """The dataclass fields as a traced-state row (the pod default)."""
+        return HyperParams.build(K=self.f.K, T=int(getattr(self, "T", 1)),
+                                 eps=self.eps, m=self.f.singleton_value)
+
+    def hyper(self, *, K=None, T=None, eps=None) -> HyperParams:
+        """Per-instance hyperparams for THIS compiled program, validated
+        against its capacities (``None`` keeps the default).
+
+        Raises ``ValueError`` when the requested budget cannot fit the
+        fixed shapes: K beyond the K_max buffer rows, or (stacked sieves)
+        an (eps, K) ladder with more rungs than the instance axis.
+        """
+        K = self.f.K if K is None else int(K)
+        T = int(getattr(self, "T", 1)) if T is None else int(T)
+        eps = self.eps if eps is None else float(eps)
+        if K > self.f.K:
+            raise ValueError(
+                f"K={K} exceeds this program's summary capacity "
+                f"K_max={self.f.K}; construct the algorithm (or pod) with "
+                "K >= the largest tenant budget")
+        self._check_hyper_capacity(K=K, eps=eps)
+        return HyperParams.build(K=K, T=T, eps=eps,
+                                 m=self.f.singleton_value)
+
+    def _check_hyper_capacity(self, *, K: int, eps: float) -> None:
+        """Hook: shape-capacity checks beyond K_max (stacked sieves add
+        the rung-axis bound)."""
+
+    def init(self, hyper: HyperParams | None = None):
         raise NotImplementedError
 
     def step(self, state, x: Array):
@@ -151,11 +192,29 @@ class StackedSieve(SieveAlgorithm):
                                               item with known accept mask
       * ``_bulk_reject(state, r)``            bookkeeping for r consecutive
                                               all-reject items, closed form
+
+    The instance axis is sized by the DEFAULT (eps, K) ladder; a smaller
+    per-session ladder (``init(hyper)``) occupies a prefix of it and masks
+    the rest out of every accept decision (``TracedLadder.valid``).
     """
 
     @property
     def n_instances(self) -> int:
         raise NotImplementedError
+
+    @property
+    def rung_cap(self) -> int:
+        """Static rung capacity of the stacked axis (per rule)."""
+        return self.ladder.num_rungs
+
+    def _check_hyper_capacity(self, *, K: int, eps: float) -> None:
+        need = Ladder(eps=eps, m=self.f.singleton_value, K=K).num_rungs
+        if need > self.rung_cap:
+            raise ValueError(
+                f"(K={K}, eps={eps}) needs {need} threshold rungs; this "
+                f"program stacks {self.rung_cap} — construct the algorithm "
+                "(or pod) with eps <= the smallest tenant eps and K >= the "
+                "largest tenant budget")
 
     def _thresholds(self, state) -> Array:
         raise NotImplementedError

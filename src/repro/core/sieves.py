@@ -4,7 +4,7 @@
 Both manage one summary per rung of the threshold ladder; we store them as a
 *stacked* pytree of LogDetStates and vmap the per-sieve update.  On SIMD
 hardware every live sieve is updated in lockstep — the resource cost the
-paper's ThreeSieves removes is plainly visible as the leading (num_rungs,)
+paper's ThreeSieves removes is plainly visible as the leading (rung_cap,)
 axis of every buffer.
 
 SieveStreaming++ additionally tracks LB = max_v f(S_v) and deactivates rungs
@@ -15,6 +15,12 @@ activity mask by ``memory_elements``.
 Both execution paths — per-item ``run`` and the chunked ``run_batched``
 fast path (one fused gains pass per state change) — derive from the shared
 ``StackedSieve`` engine in ``sieve_family`` (DESIGN.md §4).
+
+(K, eps) are traced state (``SieveState.hp``): the instance axis is sized
+by the construction-time defaults (the rung *capacity*), and a session
+with a smaller ladder occupies a prefix of it — the tail instances start
+dead (``TracedLadder.valid``) and never accept, so heterogeneous budgets
+share one compiled program (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ import jax.numpy as jnp
 
 from .functions import LogDet, LogDetState
 from .sieve_family import StackedSieve, residual_threshold, stack_states
+from .spec import HyperParams
+from .thresholds import TracedLadder
 
 Array = jax.Array
 
@@ -33,41 +41,49 @@ Array = jax.Array
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SieveState:
-    lds: LogDetState  # stacked over rungs: leading axis (num_rungs,)
-    alive: Array  # (num_rungs,) bool — SS++ deactivation (all True for SS)
-    lb: Array  # () float32 — best f seen (SS++ only)
+    lds: LogDetState  # stacked over rungs: leading axis (rung_cap,)
+    alive: Array  # (rung_cap,) bool — ladder-validity mask, further
+    # deactivated by SS++ (all live rungs stay True for plain SS)
+    lb: Array  # () f.dtype — best f seen (SS++ only)
     n_queries: Array  # () int32
     peak_mem: Array  # () int32 — max live stored elements (paper metric)
+    hp: HyperParams  # traced (K, T, eps) + ladder bounds, all () leaves
 
 
 @dataclasses.dataclass(frozen=True)
 class SieveStreaming(StackedSieve):
-    """Classic SieveStreaming: every rung is always live."""
+    """Classic SieveStreaming: every (valid) rung is always live."""
 
     plus_plus: bool = False  # SieveStreaming++ behaviour
 
     @property
     def n_instances(self) -> int:
-        return self.ladder.num_rungs
+        return self.rung_cap
 
-    def init(self) -> SieveState:
-        nv = self.ladder.num_rungs
+    def init(self, hyper: HyperParams | None = None) -> SieveState:
+        nv = self.rung_cap
+        hp = self.default_hyper() if hyper is None else hyper
         return SieveState(
             lds=stack_states(self.f.init(), nv),
-            alive=jnp.ones((nv,), bool),
-            lb=jnp.zeros((), jnp.float32),
+            alive=TracedLadder.of(hp).valid(nv),
+            lb=jnp.zeros((), self.f.dtype),
             n_queries=jnp.zeros((), jnp.int32),
             peak_mem=jnp.zeros((), jnp.int32),
+            hp=hp,
         )
 
     # ------------------------------------------------- per-item decision parts
+    def _values(self, state: SieveState) -> Array:
+        """(rung_cap,) OPT guesses in the objective's dtype."""
+        return TracedLadder.of(state.hp).values(self.rung_cap, self.f.dtype)
+
     def _thresholds(self, state: SieveState) -> Array:
-        vs = self.ladder.values()  # (nv,)
+        vs = self._values(state)  # (nv,)
         return residual_threshold(vs / 2.0, state.lds.fval, state.lds.n,
-                                  self.f.K)
+                                  state.hp.k_cap)
 
     def _can_accept(self, state: SieveState) -> Array:
-        return state.alive & (state.lds.n < self.f.K)
+        return state.alive & (state.lds.n < state.hp.k_cap)
 
     def _apply_item(self, state: SieveState, x: Array,
                     takes: Array) -> SieveState:
@@ -81,14 +97,14 @@ class SieveStreaming(StackedSieve):
             # cannot lie in [(1-eps) OPT, OPT] any more -> kill the sieve.
             # (Kazemi et al. state this via tau_min = max(LB, m)/(2K) on the
             # per-item thresholds; v < LB is the same test on OPT guesses.)
-            alive = state.alive & (self.ladder.values() > lb)
+            alive = state.alive & (self._values(state) > lb)
         else:
             lb, alive = state.lb, state.alive
         nq = state.n_queries + jnp.sum(alive.astype(jnp.int32))
         peak = jnp.maximum(state.peak_mem,
                            jnp.sum(jnp.where(alive, lds.n, 0)))
         return SieveState(lds=lds, alive=alive, lb=lb, n_queries=nq,
-                          peak_mem=peak)
+                          peak_mem=peak, hp=state.hp)
 
     def _bulk_reject(self, state: SieveState, r: Array) -> SieveState:
         """r consecutive all-reject items in closed form.

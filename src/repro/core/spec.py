@@ -1,0 +1,124 @@
+"""SessionSpec and HyperParams: per-session hyperparameters as traced state.
+
+The paper's guarantee (Thm. 2) is parameterized per stream — K trades
+memory for quality, T trades stream length for confidence, eps sets the
+threshold-ladder resolution — yet a jitted program bakes whatever Python
+scalars it was traced with into the compiled artifact.  This module splits
+the two roles those scalars used to play:
+
+  * ``SessionSpec``   — the *construction-time* description of a session
+                        (algorithm, K, T, eps, kernel config).  Plain
+                        Python, validated eagerly, hashable; the canonical
+                        input of ``repro.core.api.make``.
+  * ``HyperParams``   — the *trace-time* form: K/T/eps (plus the derived
+                        ladder geometry) as () arrays carried inside the
+                        algorithm state pytree.  Every accept decision
+                        reads these instead of frozen dataclass fields, so
+                        ONE compiled program serves any (K, T, eps) whose
+                        shapes fit its buffers — the same masked-buffer
+                        trick the session engine uses for admit/evict,
+                        applied to hyperparameters (DESIGN.md §9).
+
+The ladder bounds (ihi, num_rungs) are *derived* hyperparameters: they are
+computed here, on host in float64 (exactly the Python-``math`` arithmetic
+of ``thresholds.Ladder``, the reference the tests pin), and carried as
+int32 leaves — the traced rung math then never touches ``log`` on device,
+so per-tenant ladders cost two integers of state and stay bit-identical
+to the statically-configured ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .thresholds import Ladder
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HyperParams:
+    """Per-instance (K, T, eps) + derived ladder geometry, as () arrays.
+
+    Lives inside the algorithm state (``TSState.hp`` / ``SieveState.hp``),
+    so stacking states stacks hyperparams: a SummarizerPod slot axis turns
+    every leaf into an (S,) row and ``admit(..., spec=...)`` stamps one
+    row per tenant without retracing anything.
+    """
+
+    k_cap: Array  # () int32 — summary budget K (rows live in a K_max buffer)
+    T: Array  # () int32 — ThreeSieves' Rule-of-Three observation count
+    eps: Array  # () float32 — ladder resolution (informational at trace time)
+    base: Array  # () float32 — 1 + eps, rounded ONCE on host (bit-compat
+    # with the weak-typed ``jnp.power(1.0 + eps, ...)`` of the static path)
+    ihi: Array  # () int32 — top rung index of the geometric ladder
+    num_rungs: Array  # () int32 — live rung count (<= the program's cap)
+
+    @classmethod
+    def build(cls, *, K: int, T: int, eps: float, m: float) -> "HyperParams":
+        """Host-side constructor: validates, derives the ladder bounds in
+        float64, and freezes everything into () arrays."""
+        if int(T) < 1:
+            raise ValueError(f"T must be >= 1 (got {T!r}): ThreeSieves "
+                             "discards a threshold after T consecutive "
+                             "rejections, and T = 0 divides by zero")
+        lad = Ladder(eps=float(eps), m=float(m), K=int(K))  # validates eps/K
+        return cls(
+            k_cap=jnp.int32(K),
+            T=jnp.int32(T),
+            eps=jnp.float32(eps),
+            base=jnp.float32(1.0 + float(eps)),
+            ihi=jnp.int32(lad.ihi),
+            num_rungs=jnp.int32(lad.num_rungs),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionSpec:
+    """One session's full configuration — the canonical ``make`` input.
+
+    Two uses:
+
+      * ``make(spec)`` constructs the algorithm (objective included);
+      * ``SummarizerPod.admit(state, sid, spec=spec)`` admits a tenant
+        with its own (K, T, eps) into an already-compiled pod — only the
+        hyperparameters vary per slot; ``algo``/kernel fields must match
+        the pod's program and are validated against it.
+
+    ``d`` may stay ``None`` for admission specs (the pod's objective fixes
+    it); ``make`` requires it.
+    """
+
+    algo: str = "threesieves"
+    K: int = 10
+    T: int = 500
+    eps: float = 0.1
+    d: Optional[int] = None
+    a: float = 1.0
+    lengthscale: Optional[float] = None
+    kernel_kind: str = "rbf"
+    backend: Optional[str] = None
+    c: int = 4  # QuickStream buffer factor
+
+    def __post_init__(self):
+        if int(self.K) < 1:
+            raise ValueError(f"K must be >= 1, got {self.K!r}")
+        import math as _math
+
+        if not (_math.isfinite(float(self.eps)) and float(self.eps) > 0.0):
+            raise ValueError(f"eps must be a positive finite number, got "
+                             f"{self.eps!r} — the threshold ladder is "
+                             "geometric in (1 + eps)")
+        if int(self.T) < 1:
+            raise ValueError(f"T must be >= 1, got {self.T!r}")
+        if self.d is not None and int(self.d) < 1:
+            raise ValueError(f"d must be >= 1, got {self.d!r}")
+        if int(self.c) < 1:
+            raise ValueError(f"c must be >= 1, got {self.c!r}")
+
+    def replace(self, **kw) -> "SessionSpec":
+        return dataclasses.replace(self, **kw)

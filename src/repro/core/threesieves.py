@@ -14,6 +14,12 @@ ThreeSieves keeps a single summary plus a rejection counter, so it
 specializes the shared sieve-family engine (``sieve_family.SieveAlgorithm``)
 rather than the stacked one: rung descent under rejection is closed-form
 ((t + r) // T rungs for r rejections), not a per-instance axis.
+
+(K, T, eps) are *state*, not trace constants: ``TSState.hp`` carries them
+as () arrays (``spec.HyperParams``), so one compiled program hosts any
+budget up to the ``f.K`` buffer capacity — ``init(algo.hyper(K=..., T=...,
+eps=...))`` selects it per run, and a SummarizerPod stamps one row per
+tenant (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -25,6 +31,8 @@ import jax.numpy as jnp
 
 from .functions import LogDetState
 from .sieve_family import SieveAlgorithm, residual_threshold
+from .spec import HyperParams
+from .thresholds import TracedLadder
 
 Array = jax.Array
 
@@ -36,6 +44,7 @@ class TSState:
     j: Array  # () int32 — current rung of the threshold ladder
     t: Array  # () int32 — consecutive rejections at the current rung
     n_fused: Array  # () int32 — fused batch oracle passes (metrics)
+    hp: HyperParams  # traced (K, T, eps) + ladder bounds, all () leaves
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +55,8 @@ class ThreeSieves(SieveAlgorithm):
     rejections the current threshold is discarded with confidence
     p <= -ln(alpha)/T.  Keyword-only: inheriting the family base reordered
     the fields after ``f``, so positional (T, eps) calls must not compile.
+    ``T``/``eps`` here are the *defaults* stamped into ``init()``'s
+    hyperparams; the run itself reads ``state.hp``.
     """
 
     eps: float = dataclasses.field(default=1e-3, kw_only=True)
@@ -59,35 +70,36 @@ class ThreeSieves(SieveAlgorithm):
         return int(math.ceil(-math.log(alpha) / tau))
 
     # ------------------------------------------------------------------ state
-    def init(self) -> TSState:
+    def init(self, hyper: HyperParams | None = None) -> TSState:
         z = jnp.zeros((), jnp.int32)
-        return TSState(ld=self.f.init(), j=z, t=z, n_fused=z)
+        hp = self.default_hyper() if hyper is None else hyper
+        return TSState(ld=self.f.init(), j=z, t=z, n_fused=z, hp=hp)
 
-    def _threshold(self, ld: LogDetState, j: Array) -> Array:
-        v = self.ladder.value(j)
-        return residual_threshold(v / 2.0, ld.fval, ld.n, self.f.K)
+    def _threshold(self, ld: LogDetState, j: Array, hp: HyperParams) -> Array:
+        v = TracedLadder.of(hp).value(j, self.f.dtype)
+        return residual_threshold(v / 2.0, ld.fval, ld.n, hp.k_cap)
 
     # ------------------------------------------------------------- Algorithm 1
     def step(self, state: TSState, x: Array) -> TSState:
         """Process one stream item (lines 4-12 of Algorithm 1)."""
-        f = self.f
+        f, hp = self.f, state.hp
         ld = state.ld
         gain = f.gain1(ld, x)
-        thr = self._threshold(ld, state.j)
-        accept = (gain >= thr) & (ld.n < f.K)
+        thr = self._threshold(ld, state.j, hp)
+        accept = (gain >= thr) & (ld.n < hp.k_cap)
 
         ld2 = f.maybe_append(ld, x, accept)
         # reject branch: t += 1; if t >= T: lower rung, t = 0
         t_rej = state.t + 1
-        lower = t_rej >= self.T
-        j_rej = jnp.where(lower, jnp.minimum(state.j + 1, self.ladder.num_rungs - 1),
+        lower = t_rej >= hp.T
+        j_rej = jnp.where(lower, jnp.minimum(state.j + 1, hp.num_rungs - 1),
                           state.j)
         t_rej = jnp.where(lower, 0, t_rej)
 
         j = jnp.where(accept, state.j, j_rej)
         t = jnp.where(accept, 0, t_rej)
         ld2 = dataclasses.replace(ld2, n_queries=ld.n_queries + 1)
-        return TSState(ld=ld2, j=j, t=t, n_fused=state.n_fused)
+        return TSState(ld=ld2, j=j, t=t, n_fused=state.n_fused, hp=hp)
 
     # ---------------------------------------------------------- TPU fast path
     def run_batched(self, state: TSState, X: Array,
@@ -104,9 +116,15 @@ class ThreeSieves(SieveAlgorithm):
         (the session engine's ragged-chunk contract, see
         ``SieveAlgorithm.run``): the padded tail never accepts, never
         counts as a rejection, and never advances the rung.
+
+        T, K and the ladder all come from ``state.hp`` — under the pod's
+        ``vmap`` each session runs its own (traced) hyperparams through
+        this one program.
         """
-        f, T, B = self.f, self.T, X.shape[0]
-        nr = self.ladder.num_rungs
+        f, B = self.f, X.shape[0]
+        hp = state.hp
+        T, nr, k_cap = hp.T, hp.num_rungs, hp.k_cap
+        lad = TracedLadder.of(hp)
         r_idx = jnp.arange(B, dtype=jnp.int32)
         nv = (jnp.int32(B) if n_valid is None
               else jnp.clip(jnp.asarray(n_valid, jnp.int32), 0, B))
@@ -137,8 +155,8 @@ class ThreeSieves(SieveAlgorithm):
             def when_live():
                 r = r_idx - cursor  # position within the remaining suffix
                 j_p = jnp.minimum(j + (t + r) // T, nr - 1)
-                v_p = self.ladder.value(j_p)
-                thr_p = residual_threshold(v_p / 2.0, ld.fval, ld.n, f.K)
+                v_p = lad.value(j_p, f.dtype)
+                thr_p = residual_threshold(v_p / 2.0, ld.fval, ld.n, k_cap)
                 acc = (gains >= thr_p) & (r_idx >= cursor) & (r_idx < nv)
                 exists = jnp.any(acc)
                 istar = jnp.argmax(acc)  # first True
@@ -156,7 +174,7 @@ class ThreeSieves(SieveAlgorithm):
 
                 return jax.lax.cond(exists, on_accept, on_no_accept)
 
-            return jax.lax.cond(ld.n >= f.K, when_full, when_live)
+            return jax.lax.cond(ld.n >= k_cap, when_full, when_live)
 
         # the gains carry must match the oracle's output dtype — a f32
         # literal here crashed the while-loop for LogDet(dtype=bf16)
@@ -167,7 +185,7 @@ class ThreeSieves(SieveAlgorithm):
              state.n_fused),
         )
         ld = dataclasses.replace(ld, n_queries=ld.n_queries + nv)
-        return TSState(ld=ld, j=j, t=t, n_fused=n_fused)
+        return TSState(ld=ld, j=j, t=t, n_fused=n_fused, hp=hp)
 
     # ---------------------------------------------------------------- metrics
     def summary(self, state: TSState) -> Tuple[Array, Array, Array]:
@@ -176,5 +194,5 @@ class ThreeSieves(SieveAlgorithm):
     def insertions(self, state: TSState) -> Array:
         return state.ld.n  # single append-only summary
 
-    def memory_elements(self, state: TSState) -> int:
-        return self.f.K  # a single summary — the paper's O(K)
+    def memory_elements(self, state: TSState) -> Array:
+        return state.hp.k_cap  # a single summary — the paper's O(K)

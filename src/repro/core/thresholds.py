@@ -4,13 +4,31 @@ ThreeSieves never materializes O — thresholds are computed from the rung
 index on the fly (paper, proof of Thm. 1).  SieveStreaming(++) / Salsa
 materialize one summary per rung, which is exactly the memory blow-up the
 paper removes.
+
+Two forms live here:
+
+  * ``Ladder``        — static: eps/m/K are Python scalars, the bounds
+                        (ilo/ihi/num_rungs) come from float64 ``math``.
+                        This is the ground truth the tests pin, and what
+                        sizes the stacked sieves' instance axes.
+  * ``TracedLadder``  — traced: the same rung *values* computed from
+                        () array hyperparameters (``spec.HyperParams``
+                        carries the host-derived bounds), so one compiled
+                        program can serve per-session (K, eps).  Rung
+                        geometry is evaluated in float32 and delivered in
+                        the objective's dtype — a bf16 objective gets
+                        bf16 thresholds, not a silent f32 upcast of the
+                        accept comparison.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 
+import jax
 import jax.numpy as jnp
+
+Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -20,6 +38,23 @@ class Ladder:
     eps: float
     m: float  # max singleton value
     K: int
+
+    def __post_init__(self):
+        # degenerate hyperparams used to slip through and surface later as
+        # a math domain error (log1p(eps <= -1)), a zero division in
+        # ``ilo`` (eps = 0) or a nonsense ladder (K < 1) — fail loudly at
+        # construction instead
+        if not (isinstance(self.eps, (int, float))
+                and math.isfinite(self.eps) and self.eps > 0):
+            raise ValueError(
+                f"eps must be a positive finite number, got {self.eps!r} "
+                "(the threshold ladder is geometric in 1 + eps)")
+        if int(self.K) < 1:
+            raise ValueError(f"K must be >= 1, got {self.K!r}")
+        if not (math.isfinite(self.m) and self.m > 0):
+            raise ValueError(
+                f"max singleton value m must be positive and finite, got "
+                f"{self.m!r} (m = f({{e}}) of a normalized kernel)")
 
     @property
     def ilo(self) -> int:
@@ -33,12 +68,57 @@ class Ladder:
     def num_rungs(self) -> int:
         return max(self.ihi - self.ilo + 1, 1)
 
-    def value(self, j):
+    def value(self, j, dtype=jnp.float32):
         """Threshold at rung j (clamped), largest first. Works on tracers."""
         jc = jnp.clip(j, 0, self.num_rungs - 1)
-        return jnp.power(1.0 + self.eps, (self.ihi - jc).astype(jnp.float32))
+        v = jnp.power(1.0 + self.eps, (self.ihi - jc).astype(jnp.float32))
+        return v.astype(dtype)
 
-    def values(self) -> jnp.ndarray:
+    def values(self, dtype=jnp.float32) -> jnp.ndarray:
         """All rungs, descending — materialized (SieveStreaming & co)."""
         i = jnp.arange(self.num_rungs, dtype=jnp.float32)
-        return jnp.power(1.0 + self.eps, self.ihi - i)
+        return jnp.power(1.0 + self.eps, self.ihi - i).astype(dtype)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TracedLadder:
+    """Rung math over traced hyperparameters — no shapes depend on them.
+
+    ``base``/``ihi``/``num_rungs`` are () array leaves of a
+    ``spec.HyperParams`` (host-derived, see there); rung values are
+    ``base ** (ihi - j)`` with the rung index clamped to the live count.
+    Under ``vmap`` this evaluates one ladder per session for free.
+    """
+
+    base: Array  # () float32 — 1 + eps
+    ihi: Array  # () int32
+    num_rungs: Array  # () int32
+
+    @classmethod
+    def of(cls, hp) -> "TracedLadder":
+        """From anything carrying base/ihi/num_rungs (a HyperParams)."""
+        return cls(base=hp.base, ihi=hp.ihi, num_rungs=hp.num_rungs)
+
+    def value(self, j, dtype=jnp.float32):
+        """Threshold at rung j (clamped); rung geometry in f32, result in
+        ``dtype`` so the accept comparison runs in the objective's dtype."""
+        jc = jnp.clip(j, 0, self.num_rungs - 1)
+        v = jnp.power(self.base, (self.ihi - jc).astype(jnp.float32))
+        return v.astype(dtype)
+
+    def values(self, cap: int, dtype=jnp.float32):
+        """Materialized rungs for a ``cap``-instance program, descending.
+
+        Entries past ``num_rungs`` belong to dead instances (see
+        ``valid``); their values are well-defined continuations of the
+        geometric sequence but never reach an accept decision.
+        """
+        i = jnp.arange(cap, dtype=jnp.int32)
+        v = jnp.power(self.base, (self.ihi - i).astype(jnp.float32))
+        return v.astype(dtype)
+
+    def valid(self, cap: int) -> Array:
+        """(cap,) bool — which stacked rung instances are live for this
+        (K, eps): the masked-buffer form of a smaller ladder."""
+        return jnp.arange(cap, dtype=jnp.int32) < self.num_rungs

@@ -390,6 +390,15 @@ def run_summarizer_pod_cell(multi_pod: bool, out_dir: Path, *,
     run_batched + counters only.  Its flops/bytes delta against the
     full ``ingest`` program is exactly what double-buffering takes off
     the device's critical path.
+
+    Since the SessionSpec redesign the lowered state carries per-slot
+    hyperparam rows (``state.algo.hp``, (P*S,) leaves), so the programs
+    compiled here ARE the heterogeneous-budget programs: tenants with
+    different (K, T, eps) share them without retracing.  The
+    ``admit_spec`` entry lowers the spec-stamping admission itself —
+    ``admit(state, sid, spec=HyperParams)`` with the hyperparams as
+    *arguments* — proving a new tenant budget costs one masked
+    row-select, not a compile.
     """
     from repro.core.api import make
     from repro.data import DistributedSummarizer
@@ -471,6 +480,23 @@ def run_summarizer_pod_cell(multi_pod: bool, out_dir: Path, *,
                      "collective_bytes":
                          collective_stats(c_ro.as_text()).total_bytes}
 
+            # spec-stamping admission: hyperparams enter as () array
+            # arguments, so one compile serves every tenant budget
+            hp_abs = jax.eval_shape(
+                lambda: pod_global.algo.hyper(K=K // 2, T=100, eps=2e-3))
+            adm = jax.jit(
+                lambda st, sid, hp: pod_global.admit(st, sid, spec=hp),
+                in_shardings=(st_sh, None, None))
+            t0 = time.time()
+            c_adm = adm.lower(state, jax.ShapeDtypeStruct((), jnp.int32),
+                              hp_abs).compile()
+            res_adm = {
+                "flops": _cost_dict(c_adm).get("flops", 0.0),
+                "compile_s": round(time.time() - t0, 2),
+                "hyperparam_args": sorted(
+                    f.name for f in dataclasses.fields(hp_abs)),
+            }
+
             # periodic two-round merge over pooled local summaries (the
             # DistributedSummarizer runs over the 'data' axis only)
             dist = DistributedSummarizer(algo=algo, mesh=mesh)
@@ -490,8 +516,9 @@ def run_summarizer_pod_cell(multi_pod: bool, out_dir: Path, *,
             "shards": P_shards, "total_sessions": S_tot,
             "chunk_per_session": chunk, "items_per_ingest": N_tot,
             "mesh": dict(mesh.shape),
+            "heterogeneous_specs": True,  # per-slot (K, T, eps) rows traced
             "pod_ingest": res_u, "pod_ingest_prerouted": res_pre,
-            "readout": res_r, "merge": res_m,
+            "readout": res_r, "admit_spec": res_adm, "merge": res_m,
         }
     except Exception as e:
         result = {"cell": cell_id, "ok": False,

@@ -1,7 +1,7 @@
 """repro.serve — batched prefill/decode serving and the multi-tenant
 summarization session engine."""
 from .engine import ServeDriver, make_decode_step, make_prefill_step
-from .summarize import PodState, SummarizerPod
+from .summarize import PodReadout, PodState, SummarizerPod
 
 __all__ = ["ServeDriver", "make_decode_step", "make_prefill_step",
-           "PodState", "SummarizerPod"]
+           "PodReadout", "PodState", "SummarizerPod"]

@@ -32,6 +32,14 @@ Semantics: each session is bit-equal to running its algorithm standalone
 via ``run_batched`` on the items routed to it (tested in
 tests/test_summarizer_pod.py) — the pod is purely an execution strategy.
 
+Per-session hyperparameters (DESIGN.md §9): sieve-family algorithms carry
+(K, T, eps) as traced state (``state.hp``), so
+``admit(state, sid, spec=SessionSpec(...))`` stamps a tenant's own budget
+into its slot's (S,) hyperparam rows — one compiled program, mixed
+budgets, no retrace.  The default (``spec=None``) is the pod's own
+construction-time spec; ``readout().specs`` surfaces the live rows, and
+checkpoints round-trip them like any other state leaf.
+
 ``algo`` must be a sieve-family algorithm (uniform
 ``init/run_batched(state, X, n_valid)/summary/insertions`` protocol,
 objective bound as ``algo.f``): ThreeSieves (default and cheapest — one
@@ -40,16 +48,36 @@ summary per session), SieveStreaming(++), or Salsa.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import hashable_lru
-from repro.core.sieve_family import stack_states, tree_select
+from repro.core.sieve_family import SieveAlgorithm, stack_states, tree_select
+from repro.core.spec import HyperParams, SessionSpec
 
 Array = jax.Array
+
+
+class PodReadout(NamedTuple):
+    """Periodic per-session readout of a pod (one fixed-shape pytree).
+
+    ``drops`` surfaces the lifetime drop ledgers ``route``/``ingest``
+    accumulate — per-session ``overflow`` (S,) and the pod-total
+    ``unknown`` () — silently losing tenant data is the one failure mode
+    a summarization service must never hide.  ``specs`` is the per-slot
+    ``HyperParams`` rows ((S,) leaves: the K/T/eps each tenant bought),
+    or ``None`` for algorithms without traced hyperparams.
+    """
+
+    feats: Array  # (S, K, d)
+    n: Array  # (S,)
+    fval: Array  # (S,)
+    active: Array  # (S,) bool
+    drops: Dict[str, Array]
+    specs: Optional[HyperParams]
 
 
 @jax.tree_util.register_dataclass
@@ -122,7 +150,58 @@ class SummarizerPod:
         return jax.vmap(self.algo.insertions)(state.algo)
 
     # -------------------------------------------------------------- lifecycle
-    def admit(self, state: PodState, session_id: Array
+    def _hyper_of(self, spec) -> Optional[HyperParams]:
+        """Resolve an admission ``spec`` to traced hyperparam scalars.
+
+        ``None`` -> pod default; ``HyperParams`` passes through untouched
+        (the jit-friendly, pre-validated form — pass these as arguments
+        when jitting ``admit`` so a new tenant budget never retraces);
+        ``SessionSpec`` is validated host-side against the pod's compiled
+        program (algorithm, objective geometry, and shape capacities).
+        """
+        if spec is None:
+            return None
+        if isinstance(spec, HyperParams):
+            return spec
+        if not isinstance(spec, SessionSpec):
+            raise TypeError("spec must be a SessionSpec, HyperParams or "
+                            f"None, got {type(spec).__name__}")
+        if not isinstance(self.algo, SieveAlgorithm):
+            raise ValueError(
+                "per-session specs need a sieve-family algorithm (traced "
+                f"hyperparam state); this pod hosts "
+                f"{type(self.algo).__name__}")
+        from repro.core.api import _ALIASES, algo_name
+
+        want = _ALIASES.get(spec.algo.lower(), spec.algo.lower())
+        have = algo_name(self.algo)
+        if want != have:
+            raise ValueError(
+                f"spec.algo={spec.algo!r} does not match this pod's "
+                f"compiled program ({have}); only K/T/eps vary per slot")
+        f = self.algo.f
+        if spec.d is not None and int(spec.d) != f.d:
+            raise ValueError(f"spec.d={spec.d} != pod objective d={f.d}")
+        if spec.kernel_kind != f.kernel.kind:
+            raise ValueError(f"spec.kernel_kind={spec.kernel_kind!r} != "
+                             f"pod kernel {f.kernel.kind!r} (the kernel is "
+                             "pod-wide, not per slot)")
+        if (spec.lengthscale is not None
+                and float(spec.lengthscale) != f.kernel.lengthscale):
+            raise ValueError(f"spec.lengthscale={spec.lengthscale} != pod "
+                             f"lengthscale {f.kernel.lengthscale}")
+        if float(spec.a) != f.a:
+            raise ValueError(f"spec.a={spec.a} != pod a={f.a}")
+        return self.algo.hyper(K=spec.K, T=spec.T, eps=spec.eps)
+
+    def _fresh_rows(self, hyper: Optional[HyperParams]):
+        """(S,)-stacked freshly-initialized algorithm rows, all carrying
+        ``hyper`` (or the pod default when ``None``)."""
+        one = (self.algo.init() if hyper is None
+               else self.algo.init(hyper))
+        return stack_states(one, self.sessions)
+
+    def admit(self, state: PodState, session_id: Array, spec=None
               ) -> Tuple[PodState, Array, Array]:
         """Admit a session into the first free slot.
 
@@ -134,21 +213,40 @@ class SummarizerPod:
         with the real one.  Otherwise the slot's algorithm state is
         re-initialized, so a recycled slot starts fresh — no recompile,
         just a masked select.
+
+        ``spec`` selects the tenant's hyperparameters (``SessionSpec`` or
+        pre-built ``HyperParams``; default = the pod's own spec): the
+        slot's (S,) hyperparam rows are stamped with the tenant's
+        (K, T, eps) while the compiled program stays untouched — the
+        budgets are traced state, not trace constants (DESIGN.md §9).
+        Re-admitting a live session with an explicit spec that DIFFERS
+        from the slot's current hyperparams returns ``ok=False`` (state
+        unchanged) — a mid-stream budget change cannot be a silent no-op;
+        evict and re-admit to change plans.  A spec-less retry, or one
+        repeating the live spec, stays the idempotent success above.
         """
+        hyper = self._hyper_of(spec)
         sess = jnp.asarray(session_id, jnp.int32)
         existing = state.active & (state.sid == sess)
         present = jnp.any(existing)
         free = ~state.active
+        slot = jnp.where(present, jnp.argmax(existing), jnp.argmax(free))
+        if hyper is None:
+            spec_ok = jnp.bool_(True)
+        else:  # live slot's hp row must equal the requested one
+            row = jax.tree_util.tree_map(lambda l: l[slot], state.algo.hp)
+            eq = [jnp.all(a == b) for a, b in zip(
+                jax.tree_util.tree_leaves(row),
+                jax.tree_util.tree_leaves(hyper))]
+            spec_ok = jnp.where(present, jnp.all(jnp.stack(eq)), True)
         # negative ids are reserved (-1 marks free slots and queue
         # padding); admitting one would route every padding item into it
-        ok = (sess >= 0) & (present | jnp.any(free))
-        slot = jnp.where(present, jnp.argmax(existing), jnp.argmax(free))
+        ok = (sess >= 0) & jnp.where(present, spec_ok, jnp.any(free))
         hot = (jnp.arange(self.sessions) == slot) & ok & ~present
         z = jnp.zeros((self.sessions,), jnp.int32)
         state = dataclasses.replace(
             state,
-            algo=tree_select(hot, stack_states(self.algo.init(),
-                                               self.sessions), state.algo),
+            algo=tree_select(hot, self._fresh_rows(hyper), state.algo),
             sid=jnp.where(hot, jnp.asarray(session_id, jnp.int32), state.sid),
             active=state.active | hot,
             items=jnp.where(hot, z, state.items),
@@ -174,16 +272,21 @@ class SummarizerPod:
     def reset_slots(self, state: PodState, mask: Array) -> PodState:
         """Drift reset: re-arm the masked sessions' summaries in place.
 
-        The session keeps its slot, id and lifetime counters; only the
-        algorithm state and the drift window restart (the paper's §3
-        re-selection policy, per tenant).
+        The session keeps its slot, id, lifetime counters AND its
+        hyperparams; only the algorithm state and the drift window
+        restart (the paper's §3 re-selection policy, per tenant).  The
+        fresh rows are re-initialized per slot from the slot's own
+        ``hp`` row — a drift reset must not silently downgrade a tenant
+        to the pod default budget.
         """
         mask = mask & state.active
+        hp = getattr(state.algo, "hp", None)
+        fresh = (stack_states(self.algo.init(), self.sessions) if hp is None
+                 else jax.vmap(self.algo.init)(hp))
         z = jnp.zeros((self.sessions,), jnp.int32)
         return dataclasses.replace(
             state,
-            algo=tree_select(mask, stack_states(self.algo.init(),
-                                                self.sessions), state.algo),
+            algo=tree_select(mask, fresh, state.algo),
             win_items=jnp.where(mask, z, state.win_items),
             win_accepts=jnp.where(mask, z, state.win_accepts),
             resets=state.resets + mask.astype(jnp.int32),
@@ -298,18 +401,18 @@ class SummarizerPod:
                         "dropped_overflow": overflow}
 
     # ---------------------------------------------------------------- readout
-    def readout(self, state: PodState
-                ) -> Tuple[Array, Array, Array, Array, Dict[str, Array]]:
-        """Periodic per-session summaries: (feats (S, K, d), n (S,),
-        fval (S,), active (S,), drops).  ``drops`` surfaces the lifetime
-        drop ledgers ``route``/``ingest`` accumulate: per-session
-        ``overflow`` (S,) and the pod-total ``unknown`` () — silently
-        losing tenant data is the one failure mode a summarization
-        service must never hide."""
+    def readout(self, state: PodState) -> PodReadout:
+        """Periodic per-session summaries as a ``PodReadout`` (named
+        fields — the positional 5-tuple era is over): feats (S, K, d),
+        n (S,), fval (S,), active (S,), the lifetime ``drops`` ledgers,
+        and ``specs`` — the per-slot hyperparam rows each tenant was
+        admitted with (``None`` for algorithms without traced
+        hyperparams)."""
         feats, n, fval = jax.vmap(self.algo.summary)(state.algo)
         drops = {"overflow": state.drops_overflow,
                  "unknown": jnp.sum(state.drops_unknown)}
-        return feats, n, fval, state.active, drops
+        return PodReadout(feats=feats, n=n, fval=fval, active=state.active,
+                          drops=drops, specs=getattr(state.algo, "hp", None))
 
     # -------------------------------------------------------------- scale-out
     def make_sharded_update(self, mesh, axis="data", *,
@@ -412,7 +515,9 @@ class SummarizerPod:
         session id already live in ``into`` is a conflict (the session
         would be hosted twice) and raises.  ``into``'s pod-scoped
         ``drops_unknown`` ledger is kept as-is — it is not session
-        state.
+        state.  Per-slot hyperparams migrate with their rows (they are
+        ordinary ``state.algo.hp`` leaves), so a K=10 tenant restored
+        into a K_max=100 pod keeps its K=10 budget.
         """
         if step is None:
             step = store.latest_step()

@@ -281,7 +281,8 @@ def test_host_route_bit_equals_device_route(seed):
 
 # ------------------------------------------------------------------ pipeline
 def _assert_sessions_match_standalone(pod, state, per):
-    feats, n, fval, _, _ = pod.readout(state)
+    ro = pod.readout(state)
+    feats, n, fval = ro.feats, ro.n, ro.fval
     algo = pod.algo
     runb = jax.jit(algo.run_batched)
     slot_of = {int(s): i for i, s in enumerate(np.asarray(state.sid))}

@@ -1,0 +1,372 @@
+"""SessionSpec / HyperParams: per-tenant (K, T, eps) as traced state.
+
+The acceptance bar of the redesign (DESIGN.md §9): ONE compiled program —
+solo or pod — hosts any hyperparameters whose shapes fit its buffers, and
+a pod slot admitted with ``spec=...`` is bit-equal to a standalone run of
+the same algorithm configured with the same scalars.  Construction-time
+validation (eps > 0, K >= 1, capacity guards) and the checkpoint
+round-trip of per-slot hyperparams are pinned here too.
+"""
+import dataclasses
+import math
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import CheckpointStore
+from repro.core import (HyperParams, Ladder, SessionSpec, SIEVE_FAMILY,
+                        TracedLadder, make)
+from repro.serve import SummarizerPod
+
+LS = 1.5  # lengthscale shared by every test in this module
+
+
+def _data(seed, n, d=5, scale=2.0):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(n, d) * scale).astype(np.float32)
+
+
+# ------------------------------------------------------------ construction
+def test_make_spec_is_canonical_and_kwarg_form_is_a_shim():
+    """make(SessionSpec) and make(name, K, d, ...) build identical
+    (frozen, comparable) algorithm instances, family-wide."""
+    for name in SIEVE_FAMILY + ("quickstream", "random"):
+        spec = SessionSpec(algo=name, K=6, d=4, T=30, eps=0.2,
+                           lengthscale=LS)
+        a = make(spec)
+        b = make(name, K=6, d=4, T=30, eps=0.2, lengthscale=LS)
+        assert a == b, name
+    with pytest.raises(TypeError, match="no positional K/d"):
+        make(SessionSpec(algo="threesieves", K=4, d=3), 4, 3)
+    with pytest.raises(TypeError, match="requires K and d"):
+        make("threesieves")
+    with pytest.raises(ValueError, match="d is required"):
+        make(SessionSpec(algo="threesieves", K=4))  # admission-style spec
+
+
+def test_degenerate_hyperparams_raise_at_construction():
+    """eps <= 0 / K < 1 / T < 1 used to slip through and explode later as
+    a ``math`` domain error or zero division — now a ValueError up front."""
+    m = 0.5 * math.log(2.0)
+    for bad in (0.0, -0.1, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="eps"):
+            Ladder(eps=bad, m=m, K=5)
+        with pytest.raises(ValueError, match="eps"):
+            make("threesieves", K=5, d=3, eps=bad)
+    with pytest.raises(ValueError, match="K"):
+        Ladder(eps=0.1, m=m, K=0)
+    for name in SIEVE_FAMILY:
+        with pytest.raises(ValueError, match="K"):
+            make(name, K=0, d=3)
+    with pytest.raises(ValueError, match="T"):
+        make("threesieves", K=5, d=3, T=0)
+    with pytest.raises(ValueError, match="T"):
+        HyperParams.build(K=5, T=0, eps=0.1, m=m)
+    with pytest.raises(ValueError, match="m must be positive"):
+        Ladder(eps=0.1, m=0.0, K=5)
+
+
+def test_hyper_capacity_guards():
+    """Budgets beyond the compiled shapes are refused with actionable
+    errors: K past the buffer rows, eps past the stacked rung axis."""
+    ts = make("threesieves", K=8, d=4, eps=0.1, T=20, lengthscale=LS)
+    with pytest.raises(ValueError, match="summary capacity"):
+        ts.hyper(K=9)
+    ts.hyper(K=8)  # at capacity is fine
+    # ThreeSieves never stacks rungs -> any eps fits its program
+    ts.hyper(eps=1e-4)
+    ss = make("sievestreaming", K=8, d=4, eps=0.1, lengthscale=LS)
+    with pytest.raises(ValueError, match="rungs"):
+        ss.hyper(eps=0.01)
+    ss.hyper(eps=0.5)  # coarser ladder -> fewer rungs, fits
+
+
+def test_traced_ladder_matches_static_and_follows_dtype():
+    """TracedLadder (array hyperparams) reproduces the static float64
+    ladder bit-for-bit, and delivers thresholds in the requested dtype
+    (bf16 pods must not silently upcast the accept comparison)."""
+    m = 0.5 * math.log(2.0)
+    for eps, K in [(0.1, 20), (0.05, 8), (0.3, 3), (1e-3, 50)]:
+        lad = Ladder(eps=eps, m=m, K=K)
+        hp = HyperParams.build(K=K, T=10, eps=eps, m=m)
+        assert int(hp.ihi) == lad.ihi
+        assert int(hp.num_rungs) == lad.num_rungs
+        tl = TracedLadder.of(hp)
+        np.testing.assert_array_equal(
+            np.asarray(tl.values(lad.num_rungs)), np.asarray(lad.values()))
+        for j in (0, 1, lad.num_rungs - 1, lad.num_rungs + 3):
+            np.testing.assert_array_equal(
+                np.asarray(tl.value(jnp.int32(j))),
+                np.asarray(lad.value(jnp.int32(j))))
+        assert tl.value(jnp.int32(0), jnp.bfloat16).dtype == jnp.bfloat16
+        assert tl.values(K, jnp.bfloat16).dtype == jnp.bfloat16
+        assert lad.value(jnp.int32(0), jnp.bfloat16).dtype == jnp.bfloat16
+        assert bool(jnp.all(tl.valid(lad.num_rungs + 2)
+                            == (jnp.arange(lad.num_rungs + 2)
+                                < lad.num_rungs)))
+
+
+# ------------------------------------------------- solo runs, traced hyper
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 40), st.sampled_from([0.3, 0.15]))
+def test_run_equals_run_batched_under_traced_hyper(K, T, eps):
+    """The two execution paths stay bit-equal when (K, T, eps) come from
+    state instead of trace constants — family-wide."""
+    X = jnp.asarray(_data(seed=K * 41 + T, n=60))
+    for name in SIEVE_FAMILY:
+        algo = make(name, K=8, d=5, T=40, eps=0.1, lengthscale=LS)
+        hp = algo.hyper(K=K, T=T, eps=eps)
+        a = jax.jit(algo.run)(algo.init(hp), X)
+        b = jax.jit(algo.run_batched)(algo.init(hp), X)
+        fa, na, va = algo.summary(a)
+        fb, nb, vb = algo.summary(b)
+        assert int(na) == int(nb) <= K, name
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb),
+                                      err_msg=name)
+
+
+def test_default_hyper_matches_legacy_construction():
+    """init() == init(default_hyper()): the refactor is invisible to
+    code that never passes hyperparams."""
+    for name in SIEVE_FAMILY:
+        algo = make(name, K=5, d=4, T=15, eps=0.2, lengthscale=LS)
+        a, b = algo.init(), algo.init(algo.default_hyper())
+        for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(a),
+                                jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb),
+                err_msg=f"{name} leaf {jax.tree_util.keystr(pa)}")
+
+
+# --------------------------------------------------- the acceptance test
+def _mixed_pod(name, S=3, K_max=8):
+    algo = make(name, K=K_max, d=5, lengthscale=LS, eps=0.05, T=20)
+    pod = SummarizerPod(algo=algo, sessions=S, chunk=16)
+    specs = {5: SessionSpec(algo=name, K=3, T=7, eps=0.3),
+             6: SessionSpec(algo=name, K=K_max, T=20, eps=0.05),
+             7: None}  # pod default
+    st_ = pod.init()
+    for sid, sp in specs.items():
+        st_, _, ok = pod.admit(st_, jnp.int32(sid), spec=sp)
+        assert bool(ok)
+    return pod, algo, st_, specs
+
+
+@pytest.mark.parametrize("name", SIEVE_FAMILY)
+def test_heterogeneous_pod_bit_equal_to_solo_runs(name):
+    """ONE jitted pod program hosts sessions with different (K, T, eps);
+    every session's summary is bit-equal to a standalone ``run_batched``
+    of the same algorithm configured with the same scalars."""
+    pod, algo, st_, specs = _mixed_pod(name)
+    ing = jax.jit(pod.ingest)
+    rng = np.random.RandomState(3)
+    per = {s: [] for s in specs}
+    for _ in range(5):
+        sids = rng.choice(list(specs), 12).astype(np.int32)
+        X = _data(seed=rng.randint(1 << 30), n=12)
+        for sid, x in zip(sids, X):
+            per[int(sid)].append(x)
+        st_, _ = ing(st_, jnp.asarray(sids), jnp.asarray(X))
+    ro = pod.readout(st_)
+    assert ro.specs is not None
+    runb = jax.jit(algo.run_batched)
+    for i, (sid, sp) in enumerate(specs.items()):
+        hyper = (None if sp is None
+                 else algo.hyper(K=sp.K, T=sp.T, eps=sp.eps))
+        ref = runb(algo.init(hyper), jnp.asarray(np.stack(per[sid])))
+        rf, rn, rfv = algo.summary(ref)
+        assert int(ro.n[i]) == int(rn), f"{name} sid={sid}"
+        np.testing.assert_array_equal(np.asarray(ro.feats[i]),
+                                      np.asarray(rf), err_msg=f"{name} {sid}")
+        np.testing.assert_array_equal(np.asarray(ro.fval[i]),
+                                      np.asarray(rfv), err_msg=f"{name} {sid}")
+        # the budget is honored and surfaced
+        want_K = (pod.algo.f.K if sp is None else sp.K)
+        assert int(ro.n[i]) <= want_K
+        assert int(ro.specs.k_cap[i]) == want_K
+
+
+def test_admit_with_new_spec_never_retraces():
+    """Hyperparams are arguments, not constants: admitting tenants with
+    three different budgets compiles the admit program exactly once."""
+    algo = make("threesieves", K=8, d=5, lengthscale=LS, eps=0.05, T=20)
+    pod = SummarizerPod(algo=algo, sessions=4, chunk=16)
+    traces = 0
+
+    def admit(st_, sid, hp):
+        nonlocal traces
+        traces += 1
+        return pod.admit(st_, sid, spec=hp)
+
+    jadmit = jax.jit(admit)
+    st_ = pod.init()
+    for sid, (K, T, eps) in enumerate([(3, 7, 0.3), (8, 20, 0.05),
+                                       (5, 11, 0.1)]):
+        st_, _, ok = jadmit(st_, jnp.int32(sid),
+                            algo.hyper(K=K, T=T, eps=eps))
+        assert bool(ok)
+    assert traces == 1
+    np.testing.assert_array_equal(
+        np.asarray(pod.readout(st_).specs.k_cap)[:3], [3, 8, 5])
+
+
+def test_readmit_with_conflicting_spec_is_refused():
+    """Re-admitting a live session with a DIFFERENT explicit spec must
+    not silently keep the old budget while reporting success: it returns
+    ok=False (state untouched).  A spec-less retry, or one repeating the
+    live spec, stays the idempotent success."""
+    algo = make("threesieves", K=8, d=5, lengthscale=LS, eps=0.05, T=20)
+    pod = SummarizerPod(algo=algo, sessions=2, chunk=8)
+    st_ = pod.init()
+    st_, slot0, ok = pod.admit(st_, jnp.int32(7), spec=algo.hyper(K=3, T=9))
+    assert bool(ok)
+    # conflicting budget: refused, nothing stamped
+    st2, _, ok2 = pod.admit(st_, jnp.int32(7), spec=algo.hyper(K=5, T=9))
+    assert not bool(ok2)
+    assert int(pod.readout(st2).specs.k_cap[int(slot0)]) == 3
+    # identical spec and spec-less retries remain idempotent successes
+    st3, slot3, ok3 = pod.admit(st_, jnp.int32(7),
+                                spec=algo.hyper(K=3, T=9))
+    assert bool(ok3) and int(slot3) == int(slot0)
+    st4, slot4, ok4 = pod.admit(st_, jnp.int32(7))
+    assert bool(ok4) and int(slot4) == int(slot0)
+    for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(st_),
+                            jax.tree_util.tree_leaves(st4)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"retry mutated leaf {jax.tree_util.keystr(pa)}")
+
+
+def test_admission_spec_validated_against_pod_program():
+    algo = make("threesieves", K=8, d=5, lengthscale=LS, eps=0.05, T=20)
+    pod = SummarizerPod(algo=algo, sessions=2, chunk=8)
+    st_ = pod.init()
+    with pytest.raises(ValueError, match="does not match this pod"):
+        pod.admit(st_, jnp.int32(1), spec=SessionSpec(algo="salsa", K=4))
+    with pytest.raises(ValueError, match="kernel"):
+        pod.admit(st_, jnp.int32(1),
+                  spec=SessionSpec(algo="threesieves", K=4,
+                                   kernel_kind="linear_norm"))
+    with pytest.raises(ValueError, match="spec.d"):
+        pod.admit(st_, jnp.int32(1),
+                  spec=SessionSpec(algo="threesieves", K=4, d=9))
+    with pytest.raises(ValueError, match="summary capacity"):
+        pod.admit(st_, jnp.int32(1),
+                  spec=SessionSpec(algo="threesieves", K=99))
+    with pytest.raises(TypeError, match="spec must be"):
+        pod.admit(st_, jnp.int32(1), spec=(3, 7, 0.3))
+    # algorithms without traced hyperparams refuse per-session specs
+    qpod = SummarizerPod(algo=make("quickstream", K=4, d=5, lengthscale=LS),
+                         sessions=2, chunk=8)
+    with pytest.raises(ValueError, match="sieve-family"):
+        qpod.admit(qpod.init(), jnp.int32(1),
+                   spec=SessionSpec(algo="quickstream", K=2))
+
+
+def test_drift_reset_preserves_tenant_hyperparams():
+    """A drift reset re-arms the summary but must NOT downgrade the slot
+    to the pod-default budget — the fresh rows are re-initialized from
+    each slot's own hyperparam row."""
+    pod, algo, st_, specs = _mixed_pod("threesieves")
+    ing = jax.jit(pod.ingest)
+    rng = np.random.RandomState(0)
+    for _ in range(3):
+        sids = rng.choice(list(specs), 12).astype(np.int32)
+        st_, _ = ing(st_, jnp.asarray(sids),
+                     jnp.asarray(_data(seed=rng.randint(1 << 30), n=12)))
+    before = pod.readout(st_).specs
+    st2 = pod.reset_slots(st_, jnp.ones((pod.sessions,), bool))
+    after = pod.readout(st2).specs
+    for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(before),
+                            jax.tree_util.tree_leaves(after)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"hp leaf {jax.tree_util.keystr(pa)} changed on reset")
+    assert int(jnp.sum(pod.readout(st2).n)) == 0  # summaries re-armed
+
+
+def test_ckpt_roundtrips_per_slot_hyperparams():
+    """Per-slot (K, T, eps) survive save -> restore (full pod) and
+    migrate with their rows through the slot-subset restore
+    ``restore(slots=, into=)`` — then the migrated tenant continues
+    bit-equal to a solo run under its own budget."""
+    pod, algo, st_, specs = _mixed_pod("threesieves")
+    ing = jax.jit(pod.ingest)
+    rng = np.random.RandomState(11)
+    per = {s: [] for s in specs}
+    for _ in range(4):
+        sids = rng.choice(list(specs), 12).astype(np.int32)
+        X = _data(seed=rng.randint(1 << 30), n=12)
+        for sid, x in zip(sids, X):
+            per[int(sid)].append(x)
+        st_, _ = ing(st_, jnp.asarray(sids), jnp.asarray(X))
+    store = CheckpointStore(tempfile.mkdtemp(prefix="spec_ckpt_"))
+    pod.save(store, 1, st_)
+
+    # full restore: hyperparam rows identical
+    full, _ = pod.restore(store)
+    for (pa, la), lb in zip(
+            jax.tree_util.tree_leaves_with_path(st_.algo.hp),
+            jax.tree_util.tree_leaves(full.algo.hp)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"hp leaf {jax.tree_util.keystr(pa)}")
+
+    # slot-subset migration into a wider live pod keeps the K=3 budget
+    podB = dataclasses.replace(pod, sessions=5)
+    stB = podB.init()
+    stB, _, ok = podB.admit(stB, jnp.int32(500))
+    assert bool(ok)
+    merged, _ = podB.restore(store, slots=np.asarray([0]), into=stB,
+                             saved_sessions=pod.sessions)
+    ro = podB.readout(merged)
+    slot = int(np.flatnonzero(np.asarray(merged.sid) == 5)[0])
+    assert int(ro.specs.k_cap[slot]) == 3
+    assert int(ro.specs.T[slot]) == 7
+
+    # the migrated tenant continues under its own budget, bit-equal
+    ingB = jax.jit(podB.ingest)
+    extra = []
+    for _ in range(3):
+        X = _data(seed=rng.randint(1 << 30), n=8)
+        extra.append(X)
+        merged, _ = ingB(merged, jnp.asarray([5] * 8, dtype=jnp.int32),
+                         jnp.asarray(X))
+    ro = podB.readout(merged)
+    hyper = algo.hyper(K=3, T=7, eps=0.3)
+    Xs = jnp.asarray(np.concatenate([np.stack(per[5])] + extra))
+    ref = jax.jit(algo.run_batched)(algo.init(hyper), Xs)
+    rf, rn, rfv = algo.summary(ref)
+    assert int(ro.n[slot]) == int(rn) <= 3
+    np.testing.assert_array_equal(np.asarray(ro.feats[slot]), np.asarray(rf))
+    np.testing.assert_array_equal(np.asarray(ro.fval[slot]), np.asarray(rfv))
+
+
+def test_stacked_sieves_bf16_thresholds_follow_dtype():
+    """Companion of the ThreeSieves bf16 carry regression: the stacked
+    sieves' rung thresholds (and the SS++ lower bound) follow ``f.dtype``
+    — run == run_batched for a bf16 objective, and the state stays bf16."""
+    from repro.core import KernelConfig, LogDet
+    from repro.core.sieves import SieveStreaming
+
+    f = LogDet(K=5, d=4, kernel=KernelConfig("rbf", LS), dtype=jnp.bfloat16)
+    for pp in (False, True):
+        algo = SieveStreaming(f=f, eps=0.2, plus_plus=pp)
+        X = jnp.asarray(_data(seed=9, n=50, d=4))
+        a = jax.jit(algo.run)(algo.init(), X)
+        b = jax.jit(algo.run_batched)(algo.init(), X)
+        assert a.lds.fval.dtype == jnp.bfloat16
+        assert a.lb.dtype == jnp.bfloat16
+        fa, na, va = algo.summary(a)
+        fb, nb, vb = algo.summary(b)
+        assert int(na) == int(nb) > 0
+        np.testing.assert_array_equal(np.asarray(fa, np.float32),
+                                      np.asarray(fb, np.float32))
+        np.testing.assert_array_equal(np.asarray(va, np.float32),
+                                      np.asarray(vb, np.float32))

@@ -117,7 +117,7 @@ def test_drift_check_resets_collapsed_sessions():
     assert bool(jnp.all(mask == st.active))
     np.testing.assert_array_equal(np.asarray(st2.resets),
                                   np.asarray(mask, np.int32))
-    _, n, _, _, _ = pod.readout(st2)
+    n = pod.readout(st2).n
     assert int(jnp.sum(n)) == 0  # re-armed summaries are empty
     # lifetime counters survive the reset, the window does not
     np.testing.assert_array_equal(np.asarray(st2.items), np.asarray(st.items))
@@ -161,7 +161,8 @@ def test_pod64_lifecycle_bit_equal_to_standalone():
             st, extra = pod.restore(store)
             assert extra["round"] == rnd
 
-    feats, n, fval, active, drops = pod.readout(st)
+    ro = pod.readout(st)
+    feats, n, fval, active, drops = ro.feats, ro.n, ro.fval, ro.active, ro.drops
     assert bool(jnp.all(active))
     assert int(drops["unknown"]) == 0
     assert int(jnp.sum(drops["overflow"])) == 0
@@ -284,7 +285,8 @@ def test_pod_hosts_stacked_sieves(name):
         for sid, x in zip(sids, X):
             per[int(sid)].append(x)
         st, _ = ing(st, jnp.asarray(sids), jnp.asarray(X))
-    feats, n, fval, _, _ = pod.readout(st)
+    ro = pod.readout(st)
+    feats, n, fval = ro.feats, ro.n, ro.fval
     for i, sid in enumerate((5, 6, 7)):
         ref = jax.jit(algo.run_batched)(algo.init(),
                                         jnp.asarray(np.stack(per[sid])))
@@ -340,7 +342,8 @@ def test_pod_hosts_quickstream_tenants():
         for sid, x in zip(sids, X):
             per[int(sid)].append(x)
         st, _ = ing(st, jnp.asarray(sids), jnp.asarray(X))
-    feats, n, fval, _, _ = pod.readout(st)
+    ro = pod.readout(st)
+    feats, n, fval = ro.feats, ro.n, ro.fval
     assert bool(jnp.all(st.accepts >= 0))
     for i, sid in enumerate((5, 6, 7)):
         ref = jax.jit(algo.run_batched)(algo.init(),
@@ -370,14 +373,14 @@ def test_drop_ledgers_accumulate_and_reset_on_admit():
                                   [2, 0])
     assert int(stats["dropped_unknown"][0]) == 1
     st, stats = ing(st, sids, X)
-    _, _, _, _, drops = pod.readout(st)
+    drops = pod.readout(st).drops
     np.testing.assert_array_equal(np.asarray(drops["overflow"]), [4, 0])
     assert int(drops["unknown"]) == 2
     # recycle slot 0: session ledger resets, pod ledger survives
     st = pod.evict(st, jnp.int32(1))
     st, slot, ok = pod.admit(st, jnp.int32(3))
     assert bool(ok) and int(slot) == 0
-    _, _, _, _, drops = pod.readout(st)
+    drops = pod.readout(st).drops
     np.testing.assert_array_equal(np.asarray(drops["overflow"]), [0, 0])
     assert int(drops["unknown"]) == 2
 
@@ -441,7 +444,8 @@ def test_restore_slot_subset_into_live_pod():
         for sid, x in zip(sids, X):
             extra_items[int(sid)].append(x)
         merged, _ = ingB(merged, jnp.asarray(sids), jnp.asarray(X))
-    feats, n, fval, active, _ = podB.readout(merged)
+    ro = podB.readout(merged)
+    feats, n, fval, active = ro.feats, ro.n, ro.fval, ro.active
     for sid, slot in ((101, 1), (103, 2)):
         Xs = jnp.asarray(np.stack(per[sid] + extra_items[sid]))
         ref = jax.jit(algo.run_batched)(algo.init(), Xs)

@@ -153,3 +153,25 @@ def test_run_batched_bf16_objective():
                                   np.asarray(b.ld.feats, np.float32))
     np.testing.assert_array_equal(np.asarray(a.ld.fval, np.float32),
                                   np.asarray(b.ld.fval, np.float32))
+
+
+def test_rung_thresholds_follow_objective_dtype():
+    """Regression companion to the bf16 carry fix: ``Ladder.value`` /
+    ``values`` hardcoded float32, so a bf16 objective compared bf16 gains
+    against f32 thresholds — a silent upcast of the accept comparison.
+    Rung geometry stays in f32; the delivered threshold follows f.dtype."""
+    from repro.core import KernelConfig, LogDet
+    from repro.core.threesieves import ThreeSieves
+
+    f = LogDet(K=6, d=4, kernel=KernelConfig("rbf", 1.5),
+               dtype=jnp.bfloat16)
+    ts = ThreeSieves(f=f, T=9, eps=0.1)
+    st = ts.init()
+    assert ts.ladder.value(jnp.int32(0), f.dtype).dtype == jnp.bfloat16
+    assert ts.ladder.values(f.dtype).dtype == jnp.bfloat16
+    thr = ts._threshold(st.ld, st.j, st.hp)
+    assert thr.dtype == jnp.bfloat16
+    # default dtype stays f32 — the fix must not change the f32 ladder
+    f32 = make("threesieves", K=6, d=4, lengthscale=1.5, eps=0.1, T=9)
+    assert f32.ladder.value(jnp.int32(0)).dtype == jnp.float32
+    assert f32.ladder.values().dtype == jnp.float32
