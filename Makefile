@@ -3,11 +3,18 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify bench-oracle bench-serve bench-ingest bench
+.PHONY: verify lint bench-oracle bench-serve bench-ingest bench-autoscale \
+	bench-gate bench
 
-# tier-1: the gate every PR must keep green
+# tier-1: the gate every PR must keep green.  JUNIT=<path> additionally
+# writes a junit XML report (CI uploads it as an artifact).
+JUNIT ?=
 verify:
-	python -m pytest -x -q
+	python -m pytest -x -q $(if $(JUNIT),--junitxml=$(JUNIT))
+
+# static checks (config in ruff.toml); CI runs this as a separate job
+lint:
+	ruff check src tests benchmarks
 
 # GainOracle backend A/B sweep -> BENCH_oracle.json
 bench-oracle:
@@ -20,6 +27,18 @@ bench-serve:
 # synchronous vs double-buffered ingest -> BENCH_ingest.json
 bench-ingest:
 	python -m benchmarks.ingest_bench --smoke --json BENCH_ingest.json
+
+# live two-pod handoff latency + before/during/after throughput
+bench-autoscale:
+	python -m benchmarks.autoscale_bench --smoke --json BENCH_autoscale.json
+
+# bench-regression gate: diff the fresh BENCH_*.json in the working tree
+# against the committed baselines (git HEAD); >25% slowdown fails.
+# CI runs one file per matrix job: make bench-gate BENCHES=BENCH_serve.json
+BENCHES ?= BENCH_oracle.json BENCH_serve.json BENCH_ingest.json \
+	BENCH_autoscale.json
+bench-gate:
+	python -m benchmarks.check_regression --fresh $(BENCHES) --from-git HEAD
 
 # full benchmark harness (paper tables + kernels + roofline)
 bench:

@@ -1,0 +1,202 @@
+"""Live pod handoff: what a migration costs the serving fleet.
+
+The autoscaler's pitch is that a ThreeSieves session is cheap to move —
+a (K, d) summary buffer plus a HyperParams row — so rebalancing a hot
+pod should be a blip, not an outage.  This bench stages the full
+drain/migrate protocol on a two-pod fleet and measures exactly that
+blip:
+
+  * ``before``  — steady-state items/sec with every session on pod A;
+  * ``during``  — a window containing the handoff itself (quiesce ->
+                  snapshot -> restore -> evict -> flip -> backlog
+                  release) plus the drain of that window's items;
+  * ``after``   — steady-state items/sec with the fleet rebalanced
+                  across both pods;
+  * ``handoff_latency_ms`` — the quiesce-to-release wall time (the
+                  window in which the victims' items buffer instead of
+                  flowing), median over repeats.
+
+Migrated sessions must end bit-equal to the run that never moved — the
+bench asserts it per victim against a standalone ``run_batched`` over
+the same per-session item order (the §7 argument: a summary is a
+function of state and item order, not of which pod holds it).
+
+    PYTHONPATH=src python -m benchmarks.autoscale_bench --json \
+        BENCH_autoscale.json
+
+``--smoke`` shrinks the grid for CI; the three-phase shape is identical.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import make
+from repro.ingest import IngestPipeline, PodRouter, TaggedBuffer
+from repro.serve import PodAutoscaler, ScalePolicy, SummarizerPod
+
+
+def _feed(rng, sids_all, n_batches, batch, d):
+    out = []
+    for _ in range(n_batches):
+        sids = rng.choice(np.asarray(sids_all, np.int32), batch)
+        out.append((sids.astype(np.int32),
+                    rng.randn(batch, d).astype(np.float32)))
+    return out
+
+
+def _drain(pipe, state, batch):
+    """Run the pipeline until its (quiet) buffer is empty; -> stats."""
+    n = -(-pipe.buffer.size // batch)  # ceil; no producer is racing us
+    return pipe.run(state, max_batches=n) if n else (state, {
+        "items": 0, "wall_s": 0.0, "batches": 0,
+        "dropped_unknown": 0, "dropped_overflow": 0})
+
+
+def bench_handoff(*, S: int, victims: int, K: int, d: int, chunk: int,
+                  batch: int, phase_batches: int, repeats: int) -> dict:
+    algo = make("threesieves", K=K, d=d, T=500, eps=1e-3)
+    lat_ms, rows_eq = [], []
+    thr = {"before": [], "during": [], "after": []}
+    backlog_items = moved = 0
+    for rep in range(repeats):
+        rng = np.random.RandomState(100 + rep)
+        podA = SummarizerPod(algo=algo, sessions=S, chunk=chunk)
+        podB = SummarizerPod(algo=algo, sessions=S, chunk=chunk)
+        cap = phase_batches * batch + 64
+        pipes = {i: IngestPipeline(p, buffer=TaggedBuffer(cap), batch=batch,
+                                   get_timeout=60.0)
+                 for i, p in enumerate((podA, podB))}
+        router = PodRouter(pipelines=pipes)
+        sids_all = list(range(S))
+        stA = podA.init()
+        for sid in sids_all:
+            stA, _, _ = podA.admit(stA, jnp.int32(sid))
+        router.assign(sids_all, 0)
+        states = {0: stA, 1: podB.init()}
+        asc = PodAutoscaler(router=router, pods={0: podA, 1: podB},
+                            policy=ScalePolicy(victims=victims))
+
+        phases = [_feed(rng, sids_all, phase_batches, batch, d)
+                  for _ in range(4)]  # warmup + before + during + after
+        per: dict = {s: [] for s in sids_all}
+        for ph in phases:
+            for sids, X in ph:
+                for s, x in zip(sids.tolist(), X):
+                    per[s].append(x)
+
+        def put_phase(ph):
+            for sids, X in ph:
+                router.put(sids, X)
+
+        put_phase(phases[0])  # warmup: compile + fill
+        states[0], _ = _drain(pipes[0], states[0], batch)
+
+        put_phase(phases[1])
+        states[0], st_before = _drain(pipes[0], states[0], batch)
+
+        # the migration window: victims quiesce, their items park, the
+        # fleet keeps draining everyone else, then the backlog releases
+        put_phase(phases[2])
+        vict = asc.pick_victims(0, states[0], victims)
+        states, h = asc.handoff(states, 0, 1, vict)
+        assert h.ok, h.reason
+        states[0], d0 = _drain(pipes[0], states[0], batch)
+        states[1], d1 = _drain(pipes[1], states[1], batch)
+        lat_ms.append(h.latency_s * 1e3)
+        backlog_items = h.backlog_items
+        moved = len(h.moved)
+        thr["during"].append(
+            (d0["items"] + d1["items"])
+            / (h.latency_s + d0["wall_s"] + d1["wall_s"]))
+
+        put_phase(phases[3])
+        states[0], a0 = _drain(pipes[0], states[0], batch)
+        states[1], a1 = _drain(pipes[1], states[1], batch)
+        thr["before"].append(st_before["items"] / st_before["wall_s"])
+        thr["after"].append(
+            (a0["items"] + a1["items"]) / (a0["wall_s"] + a1["wall_s"]))
+
+        for st in (st_before, d0, d1, a0, a1):
+            assert st["dropped_unknown"] == 0 and st["dropped_overflow"] == 0
+        assert not router.drops_unrouted
+
+        # bit-equality: each migrated session vs the never-migrated run
+        roB = podB.readout(states[1])
+        tabB = podB.routing_table(states[1])
+        runb = jax.jit(algo.run_batched)
+        for sid in h.moved:
+            ref = runb(algo.init(), jnp.asarray(np.stack(per[sid])))
+            rf, rn, _ = algo.summary(ref)
+            slot = tabB[sid]
+            eq = (int(roB.n[slot]) == int(rn) and np.array_equal(
+                np.asarray(roB.feats[slot]), np.asarray(rf)))
+            rows_eq.append(eq)
+            assert eq, f"rep {rep}: migrated session {sid} diverged"
+
+    n_phase = phase_batches * batch
+    return {
+        "sessions": S, "moved": moved, "K": K, "d": d, "chunk": chunk,
+        "batch_items": batch, "phase_items": n_phase, "repeats": repeats,
+        "backlog_items_last": backlog_items,
+        "handoff_latency_ms": round(float(np.median(lat_ms)), 2),
+        "handoff_latency_ms_all": [round(t, 2) for t in lat_ms],
+        "before_items_per_sec": round(float(np.median(thr["before"])), 1),
+        "during_items_per_sec": round(float(np.median(thr["during"])), 1),
+        "after_items_per_sec": round(float(np.median(thr["after"])), 1),
+        "bit_equal": all(rows_eq),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_autoscale.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer repeats, smaller phases)")
+    args = ap.parse_args()
+
+    K, d = 32, 64
+    per_sess = 16 if args.smoke else 32
+    phase_batches = 4 if args.smoke else 10
+    repeats = 3 if args.smoke else 5
+
+    rows = []
+    for S, v in ((8, 2), (32, 8)):
+        # chunk == batch: a whole device batch may legally belong to one
+        # session (pod B right after a handoff hosts only the victims),
+        # so the routing capacity must cover it or items count overflow
+        batch = S * per_sess
+        r = bench_handoff(S=S, victims=v, K=K, d=d, chunk=batch,
+                          batch=batch,
+                          phase_batches=phase_batches, repeats=repeats)
+        rows.append(r)
+        print(f"S={S:3d} moved={r['moved']}  "
+              f"before {r['before_items_per_sec']:>10.1f} it/s  "
+              f"during {r['during_items_per_sec']:>10.1f} it/s  "
+              f"after {r['after_items_per_sec']:>10.1f} it/s  "
+              f"handoff {r['handoff_latency_ms']:.1f} ms  "
+              f"bit_equal={r['bit_equal']}")
+
+    out = {
+        "bench": "pod_autoscale_handoff",
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "note": "drain/migrate two-pod handoff under a live router fleet; "
+                "latency is the quiesce-to-release window, migrated "
+                "summaries asserted bit-equal to the unmigrated run",
+        "rows": rows,
+    }
+    Path(args.json).write_text(json.dumps(out, indent=1))
+    big = max(rows, key=lambda r: r["sessions"])
+    print(f"wrote {args.json}; S={big['sessions']} handoff "
+          f"{big['handoff_latency_ms']:.1f} ms, after/before throughput "
+          f"{big['after_items_per_sec'] / big['before_items_per_sec']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

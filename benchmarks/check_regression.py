@@ -1,0 +1,175 @@
+"""CI bench-regression gate: diff fresh BENCH_*.json against baselines.
+
+Every CI bench job regenerates its smoke ``BENCH_*.json`` in the working
+tree; the committed copy (reachable as ``git show HEAD:<file>``) is the
+baseline the repo has been promising.  Silently uploading the fresh
+artifact lets a 2x slowdown merge un-noticed — this gate prints a
+before/after table per metric and FAILS the job when any throughput
+metric regresses by more than ``--max-regression`` (default 25%).
+
+What is gated (deliberately narrow, so the gate is trustworthy):
+
+  * keys ending in ``items_per_sec`` — the items/sec throughput every
+    serving bench reports (higher is better);
+  * oracle rows' ``ms`` timings (lower is better; ``null`` entries —
+    untimed correctness-only rows — are skipped).
+
+Medians-of-repeats inside the benches keep these stable on shared CI
+hosts; ratio-style metrics (speedups, amortization) are NOT gated —
+they divide two noisy numbers and would flake the gate.
+
+    python -m benchmarks.check_regression --fresh BENCH_serve.json \
+        --from-git HEAD
+    python -m benchmarks.check_regression --fresh new.json \
+        --baseline old.json
+
+Pairs of (metric path, baseline, fresh) are matched positionally by
+JSON path (bench row order is deterministic by construction); metrics
+present on only one side are reported but never fail the gate — adding
+or renaming a bench row is a review concern, not a regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+DEFAULT_MAX_REGRESSION = 0.25
+HIGHER_SUFFIX = "items_per_sec"
+LOWER_KEYS = ("ms",)
+
+
+def _walk(doc, prefix="") -> Iterator[Tuple[str, str, object]]:
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            yield from _walk(v, f"{prefix}.{k}" if prefix else str(k))
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            yield from _walk(v, f"{prefix}[{i}]")
+    else:
+        key = prefix.rsplit(".", 1)[-1].split("[")[0]
+        yield prefix, key, doc
+
+
+def metrics(doc) -> Dict[str, Tuple[float, str]]:
+    """{json path: (value, 'higher'|'lower')} for every gated metric."""
+    out = {}
+    for path, key, val in _walk(doc):
+        if not isinstance(val, (int, float)) or isinstance(val, bool):
+            continue  # nulls (untimed rows) and non-numerics are skipped
+        if key.endswith(HIGHER_SUFFIX):
+            out[path] = (float(val), "higher")
+        elif key in LOWER_KEYS:
+            out[path] = (float(val), "lower")
+    return out
+
+
+def compare(base_doc, fresh_doc,
+            max_regression: float = DEFAULT_MAX_REGRESSION) -> List[dict]:
+    """Rows of {metric, base, fresh, ratio, ok}; ``ratio`` is normalized
+    speed (fresh vs base) so < 1 always means 'got slower'."""
+    base, fresh = metrics(base_doc), metrics(fresh_doc)
+    rows = []
+    for path in base:
+        if path not in fresh:
+            rows.append({"metric": path, "base": base[path][0],
+                         "fresh": None, "ratio": None, "ok": True,
+                         "note": "missing in fresh run"})
+            continue
+        b, direction = base[path]
+        f = fresh[path][0]
+        if b <= 0 or f <= 0:
+            rows.append({"metric": path, "base": b, "fresh": f,
+                         "ratio": None, "ok": True, "note": "non-positive"})
+            continue
+        ratio = f / b if direction == "higher" else b / f
+        rows.append({"metric": path, "base": b, "fresh": f,
+                     "ratio": ratio, "ok": ratio >= 1.0 - max_regression,
+                     "note": ""})
+    for path in fresh:
+        if path not in base:
+            rows.append({"metric": path, "base": None,
+                         "fresh": fresh[path][0], "ratio": None, "ok": True,
+                         "note": "new metric (no baseline)"})
+    return rows
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    return f"{v:,.1f}" if abs(v) >= 10 else f"{v:.3f}"
+
+
+def print_table(name: str, rows: List[dict]) -> None:
+    print(f"\n{name}")
+    w = max([len(r["metric"]) for r in rows] + [6])
+    print(f"  {'metric':<{w}}  {'baseline':>12}  {'fresh':>12}  "
+          f"{'speed':>7}  status")
+    for r in rows:
+        ratio = "-" if r["ratio"] is None else f"{r['ratio']:.2f}x"
+        status = "ok" if r["ok"] else "REGRESSED"
+        if r["note"]:
+            status += f" ({r['note']})"
+        print(f"  {r['metric']:<{w}}  {_fmt(r['base']):>12}  "
+              f"{_fmt(r['fresh']):>12}  {ratio:>7}  {status}")
+
+
+def baseline_from_git(path: Path, rev: str) -> Optional[dict]:
+    """The committed copy of ``path`` at ``rev`` (None when absent —
+    a brand-new bench has no baseline to regress against)."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{rev}:{path.as_posix()}"],
+            capture_output=True, check=True, cwd=path.resolve().parent)
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    return json.loads(out.stdout)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", nargs="+", required=True,
+                    help="fresh bench JSON file(s) from this run")
+    ap.add_argument("--baseline", nargs="+", default=None,
+                    help="explicit baseline file(s), paired with --fresh")
+    ap.add_argument("--from-git", default=None, metavar="REV",
+                    help="read each baseline as `git show REV:<fresh path>`")
+    ap.add_argument("--max-regression", type=float,
+                    default=DEFAULT_MAX_REGRESSION,
+                    help="fail when speed drops below 1 - this (default "
+                         f"{DEFAULT_MAX_REGRESSION:.0%})")
+    args = ap.parse_args(argv)
+    if (args.baseline is None) == (args.from_git is None):
+        ap.error("exactly one of --baseline or --from-git is required")
+    if args.baseline is not None and len(args.baseline) != len(args.fresh):
+        ap.error("--baseline and --fresh must pair up")
+
+    failed = 0
+    for i, fname in enumerate(args.fresh):
+        fpath = Path(fname)
+        fresh_doc = json.loads(fpath.read_text())
+        if args.from_git:
+            base_doc = baseline_from_git(fpath, args.from_git)
+            if base_doc is None:
+                print(f"\n{fname}: no baseline at {args.from_git} — "
+                      "skipped (first run of a new bench)")
+                continue
+        else:
+            base_doc = json.loads(Path(args.baseline[i]).read_text())
+        rows = compare(base_doc, fresh_doc, args.max_regression)
+        print_table(fname, rows)
+        failed += sum(not r["ok"] for r in rows)
+
+    if failed:
+        print(f"\nFAIL: {failed} metric(s) regressed more than "
+              f"{args.max_regression:.0%}")
+        return 1
+    print(f"\nOK: no metric regressed more than {args.max_regression:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,13 +15,11 @@ EXPERIMENTS.md §Repro maps to one row produced here.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.api import make
 from repro.data import MixtureSpec, drifting_mixture, gaussian_mixture

@@ -1,0 +1,93 @@
+"""An elastic two-pod summarization fleet with a live autoscaler.
+
+Six tenants pile onto pod 0 while pod 1 sits empty — the classic
+hotspot.  A ``PodAutoscaler`` watches the signals the system already
+surfaces (slot occupancy, per-slot overflow drops, front-end queue
+depths) and, when pod 0 trips the ``ScalePolicy``, executes live
+two-pod handoffs: quiesce the victims at the ``PodRouter`` front-end
+(their items buffer, none drop), snapshot their session rows through an
+in-memory checkpoint, restore them into pod 1's free slots, evict them
+from pod 0, flip the routing table and release the parked backlog.
+Streaming never stops, and every tenant's summary stays bit-equal to a
+run that never moved (the §7 argument; pinned in
+tests/test_autoscale.py).
+
+    PYTHONPATH=src python examples/autoscale_service.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import make
+from repro.ingest import DriftSource, IngestPipeline, PodRouter, TaggedBuffer
+from repro.serve import PodAutoscaler, ScalePolicy, SummarizerPod
+
+S_SLOTS, K, D, CHUNK, BATCH = 6, 16, 32, 256, 256
+TENANTS = list(range(200, 206))
+ROUNDS = 8
+
+algo = make("threesieves", K=K, d=D, T=200, eps=1e-2, lengthscale=2.0)
+pods = {0: SummarizerPod(algo=algo, sessions=S_SLOTS, chunk=CHUNK),
+        1: SummarizerPod(algo=algo, sessions=S_SLOTS, chunk=CHUNK)}
+pipes = {pid: IngestPipeline(pod, buffer=TaggedBuffer(8192), batch=BATCH,
+                             get_timeout=30.0)
+         for pid, pod in pods.items()}
+router = PodRouter(pipelines=pipes)
+
+# every tenant lands on pod 0 — the hotspot the autoscaler will fix
+states = {0: pods[0].init(), 1: pods[1].init()}
+for sid in TENANTS:
+    states[0], slot, ok = pods[0].admit(states[0], jnp.int32(sid))
+    assert bool(ok)
+router.assign(TENANTS, 0)
+
+asc = PodAutoscaler(
+    router=router, pods=pods,
+    policy=ScalePolicy(max_occupancy=0.75,  # >75% full slots = hot
+                       victim_policy="fewest-insertions", victims=2))
+
+feeder = router.feed_from(DriftSource(
+    seed=0, n_sessions=len(TENANTS), batch=BATCH, d=D,
+    session_ids=np.asarray(TENANTS), drift_per_batch=0.02,
+    n_batches=ROUNDS * 4))
+
+print(f"fleet: 2 pods x {S_SLOTS} slots; {len(TENANTS)} tenants all on "
+      f"pod 0 (occupancy {len(TENANTS) / S_SLOTS:.0%})")
+for rnd in range(ROUNDS):
+    for pid in pods:
+        # drain what the front-end routed to this pod since last round
+        n = -(-pipes[pid].buffer.size // BATCH) or 1
+        states[pid], stats = pipes[pid].run(states[pid], max_batches=n)
+        if stats["items"]:
+            print(f"round {rnd}: pod {pid} ingested {stats['items']:5d} "
+                  f"items ({stats['items'] / max(stats['wall_s'], 1e-9):,.0f}"
+                  " items/s)")
+    states, rep = asc.maybe_rebalance(states)
+    if rep is not None and rep.ok and rep.moved:
+        print(f"round {rnd}: HANDOFF pod {rep.src} -> pod {rep.dst}: "
+              f"moved {rep.moved} ({rep.reason}); backlog "
+              f"{rep.backlog_items} items forwarded, "
+              f"{rep.latency_s * 1e3:.1f} ms quiesce window")
+# a victim that raced an eviction is a counted no-op, never an error
+states, rep = asc.handoff(states, 0, 1, [999])
+print(f"\nhandoff of unknown tenant 999: ok={rep.ok} moved={rep.moved} "
+      f"skipped={rep.skipped} ({rep.reason})")
+feeder.join(timeout=30.0)
+for pid in pods:  # drain what is left after end-of-stream
+    states[pid], _ = pipes[pid].run(states[pid])
+
+print("\nfinal fleet layout:")
+for pid, pod in pods.items():
+    table = pod.routing_table(states[pid])
+    ro = pod.readout(states[pid])
+    occ = f"{len(table)}/{S_SLOTS}"
+    print(f"  pod {pid} ({occ} slots):")
+    for sid, slot in sorted(table.items()):
+        print(f"    tenant {sid}: |S|={int(ro.n[slot]):3d}  "
+              f"f(S)={float(ro.fval[slot]):7.3f}  "
+              f"items={int(states[pid].items[slot]):6d}")
+    drops = int(jnp.sum(ro.drops['overflow'])) + int(ro.drops['unknown'])
+    print(f"    dropped: {drops} (pod)  "
+          f"{sum(pipes[pid].buffer.drop_counts().values())} (buffer)")
+print(f"router unrouted drops: {sum(router.drops_unrouted.values())}")
+print(f"victim no-ops counted: {asc.skipped_unknown}")
+assert sum(router.drops_unrouted.values()) == 0

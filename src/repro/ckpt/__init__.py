@@ -1,4 +1,5 @@
-"""repro.ckpt — manifest checkpointing with elastic resharding."""
-from .store import CheckpointStore
+"""repro.ckpt — manifest checkpointing with elastic resharding, plus the
+in-memory snapshot store the pod-handoff path uses."""
+from .store import CheckpointStore, MemoryStore
 
-__all__ = ["CheckpointStore"]
+__all__ = ["CheckpointStore", "MemoryStore"]

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import importlib
-from typing import Dict
 
 from repro.models import ModelConfig
 

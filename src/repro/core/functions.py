@@ -35,8 +35,6 @@ sequential triangular solves.  This is the hardware adaptation of the paper's
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

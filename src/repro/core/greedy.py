@@ -13,7 +13,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .functions import LogDet, LogDetState
+from .functions import LogDet
 
 Array = jax.Array
 

@@ -32,7 +32,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .functions import LogDet, LogDetState
+from .functions import LogDet
 from .spec import HyperParams
 from .thresholds import Ladder
 

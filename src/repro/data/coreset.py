@@ -19,15 +19,12 @@ Drift handling per the paper §3: the selector can be re-armed periodically
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.api import make
-from repro.core.threesieves import ThreeSieves, TSState
 
 Array = jax.Array
 

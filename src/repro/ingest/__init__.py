@@ -8,12 +8,12 @@ double-buffers host routing against the device step:
     (producer threads)        (overlapped with the running pod program)
 """
 from .buffer import PAD_SID, POLICIES, TaggedBuffer
-from .pipeline import IngestPipeline, host_route
+from .pipeline import IngestPipeline, PodRouter, host_route
 from .sources import (MAGIC, DriftSource, ReplaySource, SocketSource, Source,
                       SubsampleSource, TaggedBatch, connect_producer,
                       send_frame)
 
 __all__ = ["PAD_SID", "POLICIES", "TaggedBuffer", "IngestPipeline",
-           "host_route", "MAGIC", "DriftSource", "ReplaySource",
+           "PodRouter", "host_route", "MAGIC", "DriftSource", "ReplaySource",
            "SocketSource", "Source", "SubsampleSource", "TaggedBatch",
            "connect_producer", "send_frame"]

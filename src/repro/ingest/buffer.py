@@ -26,6 +26,15 @@ Fairness: items live in per-session FIFO queues; ``get`` drains them
 round-robin, one item per live session per turn.  Per-session order is
 therefore preserved end-to-end (the pod's routing contract); global
 interleaving is deliberately NOT preserved — that is the fairness.
+
+Quiesce (the autoscaler's handoff primitive, DESIGN.md §10): a session
+marked ``quiesce``d keeps *receiving* items but ``get`` stops draining
+it — its backlog parks in the buffer, uncounted as dropped, until
+``release`` (resume draining here) or ``extract`` (hand the backlog to
+another pod's buffer, FIFO intact).  The drop-oldest policy spares
+quiesced queues while any other queue can pay instead: clipping a
+session mid-migration would silently violate the handoff's
+zero-drop contract.
 """
 from __future__ import annotations
 
@@ -52,6 +61,7 @@ class TaggedBuffer:
         self._q: "collections.OrderedDict[int, collections.deque]" = \
             collections.OrderedDict()  # sid -> FIFO of (d,) float32 rows
         self._size = 0
+        self._quiesced: set = set()  # sids parked: fed, never drained
         self._closed = False
         self._lock = threading.Lock()
         self._not_full = threading.Condition(self._lock)
@@ -72,6 +82,71 @@ class TaggedBuffer:
     def drop_counts(self) -> Dict[int, int]:
         with self._lock:
             return dict(self.drops)
+
+    def depths(self) -> Dict[int, int]:
+        """Per-session queue depth — the autoscaler's load signal (and
+        the ``largest-queue`` victim policy's ranking key)."""
+        with self._lock:
+            return {sid: len(dq) for sid, dq in self._q.items()}
+
+    def quiesced(self) -> set:
+        with self._lock:
+            return set(self._quiesced)
+
+    def _avail(self) -> int:
+        """Drainable items (excludes quiesced sessions' backlogs)."""
+        return self._size - sum(
+            len(self._q[s]) for s in self._quiesced if s in self._q)
+
+    # ---------------------------------------------------------------- quiesce
+    def quiesce(self, sids) -> None:
+        """Park ``sids``: ``put`` keeps feeding their queues, ``get``
+        stops draining them.  Step 1 of a pod handoff — the victims'
+        items buffer here, none dropped, while their summary rows move."""
+        with self._lock:
+            self._quiesced.update(int(s) for s in np.asarray(sids).ravel())
+
+    def release(self, sids) -> None:
+        """Un-park ``sids``; their backlog drains again from here."""
+        with self._lock:
+            self._quiesced.difference_update(
+                int(s) for s in np.asarray(sids).ravel())
+            self._not_empty.notify_all()
+
+    def inject(self, sids, rows) -> None:
+        """Enqueue relocated items, bypassing capacity and closed checks.
+
+        The migration counterpart of ``extract``: a handoff's parked
+        backlog was already admitted (and counted against a buffer's
+        capacity) at the source pod — re-admitting it at the target
+        must neither block, drop, nor fail because the stream happened
+        to close mid-handoff.  Not for producers; ``put`` is."""
+        with self._lock:
+            for sid, row in zip(
+                    (int(s) for s in np.asarray(sids).ravel()), rows):
+                self._q.setdefault(sid, collections.deque()).append(
+                    np.asarray(row, np.float32))
+                self._size += 1
+            self._not_empty.notify_all()
+
+    def extract(self, sids) -> Tuple[np.ndarray, list]:
+        """Atomically remove and return every buffered item of ``sids``
+        (per-session FIFO order) — the backlog-migration half of
+        ``release``: the caller forwards it to the target pod's buffer.
+        Also un-parks the sids here.  -> (sids (M,), [rows])."""
+        out_s: list = []
+        out_x: list = []
+        with self._lock:
+            for sid in (int(s) for s in np.asarray(sids).ravel()):
+                self._quiesced.discard(sid)
+                dq = self._q.pop(sid, None)
+                if dq:
+                    out_s.extend([sid] * len(dq))
+                    out_x.extend(dq)
+                    self._size -= len(dq)
+            if out_s:
+                self._not_full.notify_all()
+        return np.asarray(out_s, np.int32), out_x
 
     # --------------------------------------------------------------- producer
     def put(self, sids, X, timeout: Optional[float] = None) -> int:
@@ -103,7 +178,12 @@ class TaggedBuffer:
                         dropped += 1
                         continue
                     else:  # drop-oldest: clip the longest queue's head
-                        victim = max(self._q, key=lambda s: len(self._q[s]))
+                        # quiesced sessions are mid-migration: clipping
+                        # them breaks the handoff's zero-drop contract,
+                        # so they only pay when no one else can
+                        pool = [s for s in self._q if s not in
+                                self._quiesced] or list(self._q)
+                        victim = max(pool, key=lambda s: len(self._q[s]))
                         self._q[victim].popleft()
                         if not self._q[victim]:
                             del self._q[victim]
@@ -143,23 +223,32 @@ class TaggedBuffer:
         """
         need = max(1, min(min_items, max_items))
         with self._lock:
+            # quiesced backlogs are invisible here: they neither satisfy
+            # the fill threshold nor drain (they belong to a migrating
+            # session and leave via extract/release)
             if not self._not_empty.wait_for(
-                    lambda: self._size >= need or self._closed, timeout):
+                    lambda: self._avail() >= need or self._closed, timeout):
                 raise TimeoutError(
                     f"TaggedBuffer below {need} items for {timeout}s")
-            if self._size == 0:  # closed and drained
+            if self._avail() == 0:  # closed and drained (of drainables)
                 return None
             out_s, out_x = [], []
             while len(out_s) < max_items and self._q:
                 # one item per live session per round — the fairness turn
+                took = 0
                 for sid in list(self._q):
                     if len(out_s) >= max_items:
                         break
+                    if sid in self._quiesced:
+                        continue
                     dq = self._q[sid]
                     out_s.append(sid)
                     out_x.append(dq.popleft())
+                    took += 1
                     if not dq:
                         del self._q[sid]
+                if not took:  # only quiesced queues remain
+                    break
             self._size -= len(out_s)
             self._not_full.notify_all()
         sids = np.asarray(out_s, np.int32)

@@ -33,13 +33,18 @@ Feed modes:
   * ``buffer=``              drain a ``TaggedBuffer`` that producer
                              threads fill (sockets, generators) — add
                              ``feed_from(source)`` to spawn the feeder.
+
+``PodRouter`` is the fleet front-end above all of that: one ingress
+point fanning a tagged stream out to N pods' buffers through a host
+routing table (sid -> pod id), with the table flip + backlog migration
+primitive the ``serve.autoscale.PodAutoscaler`` drives (DESIGN.md §10).
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Iterator, Optional, Tuple
+from typing import Dict, Iterator, Optional, Tuple
 
 import jax
 import numpy as np
@@ -214,6 +219,13 @@ class IngestPipeline:
                 sids, X = next(self._gen)
             except StopIteration:
                 self.exhausted = True
+                if self.buffer is not None:
+                    # buffer mode: a later run() must re-check the buffer
+                    # — a pod handoff may inject relocated backlog AFTER
+                    # the stream closed, and it must still drain (source
+                    # mode keeps the spent generator: re-creating it
+                    # would replay the source from the start)
+                    self._gen = None
                 break
             chunks, counts, unknown, overflow = host_route(
                 sid_table, active, sids, X, C)
@@ -240,3 +252,175 @@ class IngestPipeline:
                        "padded": padded, "wall_s": wall,
                        "dropped_unknown": drop_unknown,
                        "dropped_overflow": drop_overflow}
+
+
+@dataclasses.dataclass
+class PodRouter:
+    """Fleet front-end: one tagged ingress, N pods, a host routing table.
+
+    Each pod runs its own buffer-mode ``IngestPipeline``; the router owns
+    the sid -> pod-id table and fans ``put`` batches out to the right
+    pod's ``TaggedBuffer`` (per-session FIFO is preserved — a session's
+    items all flow through one buffer at a time).  Items for sids with
+    no table entry are counted in ``drops_unrouted`` per sid — a
+    front-end routing error must be loud, exactly like the pod-side
+    ``drops_unknown`` ledger.
+
+    The autoscaler's handoff protocol uses the two migration primitives:
+
+      * ``quiesce(sids)`` — park the victims in their *current* pod's
+        buffer (arrivals keep landing there, nothing drains, nothing is
+        dropped) so the pod can finish in-flight work and its summary
+        rows can be snapshotted at a stable point;
+      * ``migrate(sids, dst)`` — atomically flip the table and move the
+        parked backlog into the target pod's buffer.  The router lock
+        serializes this against ``put``, so a racing producer cannot
+        slip a newer item in front of the backlog: per-session FIFO
+        survives the handoff.
+    """
+
+    pipelines: Dict[int, IngestPipeline]
+
+    def __post_init__(self):
+        for pid, pipe in self.pipelines.items():
+            if pipe.buffer is None:
+                raise ValueError(
+                    f"pod {pid}: PodRouter needs buffer-mode pipelines")
+        self._table: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        self._feeders = []
+        self.drops_unrouted: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- the table
+    def assign(self, sids, pod_id: int) -> None:
+        """Route ``sids`` to ``pod_id`` from now on (admission time)."""
+        if pod_id not in self.pipelines:
+            raise KeyError(f"unknown pod id {pod_id}")
+        with self._lock:
+            for sid in np.asarray(sids).ravel():
+                self._table[int(sid)] = pod_id
+
+    def unassign(self, sids) -> None:
+        """Drop table entries (eviction time); later items count as
+        unrouted."""
+        with self._lock:
+            for sid in np.asarray(sids).ravel():
+                self._table.pop(int(sid), None)
+
+    def owner(self, sid: int) -> Optional[int]:
+        with self._lock:
+            return self._table.get(int(sid))
+
+    def table(self) -> Dict[int, int]:
+        with self._lock:
+            return dict(self._table)
+
+    # ------------------------------------------------------------------ feed
+    def put(self, sids, X, timeout: Optional[float] = None) -> None:
+        """Fan one tagged batch out to the pods' buffers by table.
+
+        The buffer writes happen OUTSIDE the router lock: a ``block``
+        policy buffer may wait indefinitely for space, and the thing
+        that frees space mid-handoff is ``migrate`` extracting the
+        parked backlog — which needs this lock.  Holding it across a
+        blocking ``put`` would deadlock producer, handoff and all
+        routing.  The price is a put/flip race, repaired after the
+        fact: any rows that landed in a pod the table no longer points
+        to are relocated to the new owner — they are newer than the
+        migrated backlog (same producer), so appending them behind it
+        preserves per-session FIFO.
+        """
+        sids = np.asarray(sids, np.int32).ravel()
+        X = np.asarray(X, np.float32)
+        with self._lock:
+            dest = np.empty(len(sids), np.int64)
+            for i, sid in enumerate(sids.tolist()):
+                pid = self._table.get(sid, -1)
+                dest[i] = pid
+                if pid < 0:
+                    self.drops_unrouted[sid] = \
+                        self.drops_unrouted.get(sid, 0) + 1
+        for pid in self.pipelines:
+            m = dest == pid
+            if not m.any():
+                continue
+            self.pipelines[pid].buffer.put(sids[m], X[m], timeout=timeout)
+            with self._lock:  # repair: did a flip race the enqueue?
+                stale = {sid for sid in set(sids[m].tolist())
+                         if self._table.get(sid, pid) != pid}
+                for sid in stale:
+                    bs, bx = self.pipelines[pid].buffer.extract([sid])
+                    if len(bs):
+                        owner = self._table[sid]
+                        self.pipelines[owner].buffer.inject(bs, bx)
+
+    def feed_from(self, source: Source, *, close: bool = True,
+                  put_timeout: Optional[float] = None) -> threading.Thread:
+        """Producer thread: route ``source`` through the table; on
+        exhaustion close every pod's buffer (end-of-stream fans out)."""
+
+        def _run():
+            try:
+                for sids, X in source:
+                    self.put(sids, X, timeout=put_timeout)
+            except BaseException as e:
+                for pipe in self.pipelines.values():
+                    pipe._feed_exc = e  # surfaced by each pipe's run()
+            finally:
+                if close:
+                    for pipe in self.pipelines.values():
+                        pipe.buffer.close()
+
+        t = threading.Thread(target=_run, daemon=True)
+        t.start()
+        self._feeders.append(t)
+        return t
+
+    # ------------------------------------------------------------- migration
+    def quiesce(self, sids) -> None:
+        """Park ``sids`` in their current pods' buffers (handoff step 1)."""
+        with self._lock:
+            by_pod: Dict[int, list] = {}
+            for sid in np.asarray(sids).ravel():
+                pid = self._table.get(int(sid))
+                if pid is not None:
+                    by_pod.setdefault(pid, []).append(int(sid))
+            for pid, group in by_pod.items():
+                self.pipelines[pid].buffer.quiesce(group)
+
+    def release(self, sids) -> None:
+        """Un-park ``sids`` in place (handoff aborted): their backlog
+        resumes draining to the pod that already owns them."""
+        with self._lock:
+            by_pod: Dict[int, list] = {}
+            for sid in np.asarray(sids).ravel():
+                pid = self._table.get(int(sid))
+                if pid is not None:
+                    by_pod.setdefault(pid, []).append(int(sid))
+            for pid, group in by_pod.items():
+                self.pipelines[pid].buffer.release(group)
+
+    def migrate(self, sids, dst: int) -> int:
+        """Flip the table for ``sids`` and move their parked backlog to
+        pod ``dst``'s buffer, atomically w.r.t. ``put``.  Returns the
+        number of backlog items moved (zero dropped, by construction)."""
+        if dst not in self.pipelines:
+            raise KeyError(f"unknown pod id {dst}")
+        moved = 0
+        with self._lock:
+            by_pod: Dict[int, list] = {}
+            for sid in np.asarray(sids).ravel():
+                pid = self._table.get(int(sid))
+                if pid is not None and pid != dst:
+                    by_pod.setdefault(pid, []).append(int(sid))
+                self._table[int(sid)] = dst
+            dst_buf = self.pipelines[dst].buffer
+            for pid, group in by_pod.items():
+                bs, bx = self.pipelines[pid].buffer.extract(group)
+                if len(bs):
+                    # inject, not put: the backlog was already admitted
+                    # at the source — relocation must not block on the
+                    # target's capacity or fail on a racing close
+                    dst_buf.inject(bs, bx)
+                    moved += len(bs)
+        return moved

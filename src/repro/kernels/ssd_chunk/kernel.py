@@ -25,7 +25,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _ssd_chunk_kernel(x_ref, adt_ref, b_ref, c_ref, y_ref, st_ref):

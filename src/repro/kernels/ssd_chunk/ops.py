@@ -6,7 +6,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import ssd_chunk_pallas
 from .ref import ssd_chunk_ref
@@ -23,7 +22,6 @@ def ssd_chunks(X, Adt, B, C, *, chunk: int, use_pallas: bool = False,
     term and end-states (states transposed to (p, n) there).
     """
     b, L, h, p = X.shape
-    n = B.shape[-1]
     c = L // chunk
     # (b, L, h, x) -> (b, h, c, q, x)
     tf = lambda t: t.reshape(b, c, chunk, h, -1).transpose(0, 3, 1, 2, 4)

@@ -12,7 +12,6 @@ logits, B/C (q, n) input/output projections.  fp32 accumulation.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -31,6 +31,7 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import all_archs, get_config
@@ -40,7 +41,7 @@ from repro.launch.inputs import SHAPES, cell_applicable, input_specs
 from repro.launch.mesh import make_production_mesh
 from repro.models import Model
 from repro.serve.engine import make_decode_step, make_prefill_step
-from repro.train.optim import AdamWConfig, OptState, init_opt_state
+from repro.train.optim import AdamWConfig, OptState
 from repro.train.step import TrainStepConfig, make_train_step
 
 # TPU v5e constants (§Roofline)
@@ -535,6 +536,115 @@ def run_summarizer_pod_cell(multi_pod: bool, out_dir: Path, *,
     return result
 
 
+def run_handoff_cell(multi_pod: bool, out_dir: Path, *,
+                     sessions_per_shard: int = 16, chunk: int = 1024,
+                     K: int = 100, d: int = 256, victims: int = 8) -> dict:
+    """The ``paper-summarizer__handoff__*`` cell: the device-side
+    programs of a pod->pod session migration, lowered on the production
+    mesh.
+
+    A live handoff (serve.autoscale) is mostly host work — quiesce,
+    snapshot, table flip — but two programs do run on device and must
+    compile against the sharded P*S-session state: the victim eviction
+    (``evict_sids``, one masked row-select over the whole victim set)
+    and the target pod's post-restore ingest (identical to the pod
+    cell's hot path — recorded here as the program the migrated tenants
+    land in).  The cell also records the migration payload: the exact
+    bytes per session row the checkpoint path moves (the fixed-memory
+    summary the paper promises — THE reason sessions are cheap to
+    move), and the payload of a ``victims``-session handoff.
+    """
+    from repro.core.api import make
+    from repro.serve.summarize import SummarizerPod
+
+    mesh_name = "pod512" if multi_pod else "pod256"
+    cell_id = f"paper-summarizer__handoff__{mesh_name}"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = ("pod", "data") if multi_pod else ("data",)
+    P_shards = 1
+    for ax in axes:
+        P_shards *= mesh.shape[ax]
+    S_tot = P_shards * sessions_per_shard
+
+    algo = make("threesieves", K=K, d=d, T=5000, eps=1e-3)
+    pod = SummarizerPod(algo=algo, sessions=sessions_per_shard, chunk=chunk)
+    pod_global = dataclasses.replace(pod, sessions=S_tot)
+
+    state = jax.eval_shape(pod_global.init)
+    data_sh = NamedSharding(mesh, P(axes))
+    st_sh = jax.tree_util.tree_map(lambda _: data_sh, state)
+
+    # per-session migration payload from the abstract state: every leaf
+    # contributes its per-slot row (shape[1:]) at its dtype
+    row_bytes = sum(
+        int(np.prod(leaf.shape[1:])) * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(state))
+
+    try:
+        with mesh:
+            ev = jax.jit(pod_global.evict_sids,
+                         in_shardings=(st_sh, None), out_shardings=st_sh)
+            vict_abs = jax.ShapeDtypeStruct((victims,), jnp.int32)
+            t0 = time.time()
+            c_ev = ev.lower(state, vict_abs).compile()
+            t_ev = time.time() - t0
+            cost_ev = _cost_dict(c_ev)
+            res_ev = {
+                "flops": cost_ev.get("flops", 0.0),
+                "bytes": cost_ev.get("bytes accessed", 0.0),
+                "collective_bytes":
+                    collective_stats(c_ev.as_text()).total_bytes,
+                "compile_s": round(t_ev, 2),
+            }
+            # the program the migrated tenants land in: the target pod's
+            # pre-routed ingest (the double-buffered pipeline's device
+            # half), same shapes as the pod cell's hot path
+            upd_pre = jax.jit(
+                pod.make_sharded_update(mesh, axis=axes, pre_routed=True),
+                in_shardings=(st_sh, data_sh, data_sh, data_sh, data_sh),
+                out_shardings=(st_sh, {"counts": data_sh,
+                                       "dropped_unknown": data_sh,
+                                       "dropped_overflow": data_sh}))
+            t0 = time.time()
+            c_in = upd_pre.lower(
+                state,
+                jax.ShapeDtypeStruct((S_tot, chunk, d), jnp.float32),
+                jax.ShapeDtypeStruct((S_tot,), jnp.int32),
+                jax.ShapeDtypeStruct((P_shards,), jnp.int32),
+                jax.ShapeDtypeStruct((S_tot,), jnp.int32)).compile()
+            cost_in = _cost_dict(c_in)
+            res_in = {
+                "flops": cost_in.get("flops", 0.0),
+                "bytes": cost_in.get("bytes accessed", 0.0),
+                "compile_s": round(time.time() - t0, 2),
+            }
+        result = {
+            "cell": cell_id, "ok": True,
+            "K": K, "d": d, "sessions_per_shard": sessions_per_shard,
+            "shards": P_shards, "total_sessions": S_tot,
+            "victims": victims, "mesh": dict(mesh.shape),
+            "session_row_bytes": row_bytes,
+            "handoff_payload_bytes": row_bytes * victims,
+            "evict_sids": res_ev,
+            "target_ingest_prerouted": res_in,
+        }
+    except Exception as e:
+        result = {"cell": cell_id, "ok": False,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-3000:]}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(result, indent=1))
+    status = "OK " if result["ok"] else "FAIL"
+    print(f"[{status}] {cell_id}  "
+          + (f"{result['total_sessions']} sessions, row="
+             f"{result['session_row_bytes']:,} B, "
+             f"{victims}-victim payload="
+             f"{result['handoff_payload_bytes']:,} B, evict compile="
+             f"{result['evict_sids']['compile_s']}s"
+             if result["ok"] else result["error"]))
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -553,13 +663,15 @@ def main():
                     help="fd = finite-difference unrolled roofline pass")
     args = ap.parse_args()
 
-    if args.arch == "paper-summarizer":
-        # the SummarizerPod session-engine cells (no model arch involved)
+    if args.arch in ("paper-summarizer", "paper-handoff"):
+        # the SummarizerPod session-engine / pod-handoff cells (no model
+        # arch involved)
         out_dir = Path(args.out)
         meshes = {"single": [False], "multi": [True],
                   "both": [False, True]}[args.mesh]
-        n_fail = sum(0 if run_summarizer_pod_cell(mp, out_dir)["ok"] else 1
-                     for mp in meshes)
+        cell = (run_handoff_cell if args.arch == "paper-handoff"
+                else run_summarizer_pod_cell)
+        n_fail = sum(0 if cell(mp, out_dir)["ok"] else 1 for mp in meshes)
         print(f"done; {n_fail} failures")
         raise SystemExit(1 if n_fail else 0)
 

@@ -14,13 +14,12 @@ Shape table (assigned to this paper):
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import Model, ModelConfig, init_cache
+from repro.models import ModelConfig, init_cache
 
 SHAPES: Dict[str, Dict[str, Any]] = {
     "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},

@@ -12,11 +12,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.ckpt import CheckpointStore
 from repro.configs import all_archs, get_config

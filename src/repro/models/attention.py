@@ -11,13 +11,12 @@ The pure-JAX chunked implementation is the CPU / dry-run path; on real TPU
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .config import MLAConfig, ModelConfig
+from .config import ModelConfig
 from .layers import ParamDef, apply_norm, apply_rope, norm_spec, shard_act
 
 Array = jax.Array

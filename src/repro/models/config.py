@@ -4,7 +4,7 @@ dense / GQA / MLA / MoE / SSM (Mamba2 SSD) / hybrid / enc-dec / stub-frontend.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax.numpy as jnp
 

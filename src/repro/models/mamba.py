@@ -137,7 +137,6 @@ def _project(p, x: Array, cfg: ModelConfig):
     s = cfg.ssm
     d = cfg.d_model
     di = s.d_inner(d)
-    gn = s.n_groups * s.d_state
     dt_ = x.dtype
     zx = shard_act(x @ p["w_zx"].astype(dt_), "batch", None, "tp")
     z, xin = zx[..., :di], zx[..., di:]
@@ -150,7 +149,6 @@ def _project(p, x: Array, cfg: ModelConfig):
 def _split_heads(xc, bcc, cfg: ModelConfig):
     s = cfg.ssm
     d = cfg.d_model
-    di = s.d_inner(d)
     nh = s.n_heads(d)
     gn = s.n_groups * s.d_state
     B_, C_ = bcc[..., :gn], bcc[..., gn:]

@@ -1,7 +1,11 @@
-"""repro.serve — batched prefill/decode serving and the multi-tenant
-summarization session engine."""
+"""repro.serve — batched prefill/decode serving, the multi-tenant
+summarization session engine, and the pod autoscaler driving live
+session migration across an elastic fleet."""
+from .autoscale import (VICTIM_POLICIES, HandoffReport, PodAutoscaler,
+                        PodSignals, ScalePolicy)
 from .engine import ServeDriver, make_decode_step, make_prefill_step
 from .summarize import PodReadout, PodState, SummarizerPod
 
 __all__ = ["ServeDriver", "make_decode_step", "make_prefill_step",
-           "PodReadout", "PodState", "SummarizerPod"]
+           "PodReadout", "PodState", "SummarizerPod", "PodAutoscaler",
+           "ScalePolicy", "PodSignals", "HandoffReport", "VICTIM_POLICIES"]

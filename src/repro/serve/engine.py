@@ -9,12 +9,12 @@ function lowered by the dry-run for ``decode_*`` / ``long_*`` shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import Model, ModelConfig, init_cache
+from repro.models import Model, init_cache
 
 Array = jax.Array
 

@@ -262,12 +262,33 @@ class SummarizerPod:
 
     def evict(self, state: PodState, session_id: Array) -> PodState:
         """Free the slot hosting ``session_id`` (no-op when absent)."""
-        gone = state.active & (state.sid == jnp.asarray(session_id, jnp.int32))
+        return self.evict_sids(
+            state, jnp.asarray(session_id, jnp.int32).reshape(1))
+
+    def evict_sids(self, state: PodState, session_ids: Array) -> PodState:
+        """Free every slot hosting one of ``session_ids`` ((M,) int32;
+        absentees are no-ops) in a single masked select — the
+        evict-after-handoff step of a pod migration frees all victim
+        slots at once, not one jitted call per victim."""
+        sids = jnp.asarray(session_ids, jnp.int32).reshape(-1)
+        gone = state.active & jnp.any(
+            state.sid[:, None] == sids[None, :], axis=1)
         return dataclasses.replace(
             state,
             active=state.active & ~gone,
             sid=jnp.where(gone, -1, state.sid),
         )
+
+    def routing_table(self, state: PodState) -> Dict[int, int]:
+        """Host export of the live slot table: {session_id: slot}.
+
+        The fleet front-end (``ingest.PodRouter``) and the autoscaler
+        read this to know which sessions a pod hosts and where — the
+        device-side truth the host routing tables are rebuilt from
+        after admits, evictions and handoffs."""
+        sid = np.asarray(state.sid)
+        active = np.asarray(state.active)
+        return {int(s): i for i, s in enumerate(sid) if active[i]}
 
     def reset_slots(self, state: PodState, mask: Array) -> PodState:
         """Drift reset: re-arm the masked sessions' summaries in place.

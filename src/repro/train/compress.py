@@ -17,7 +17,6 @@ same train_step works single-pod.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Tuple
 
 import jax

@@ -14,7 +14,9 @@ Production concerns handled here (all CPU-testable):
     is surfaced in metrics so the policy is testable).  The loop also
     supports ``max_step_s`` as a hard watchdog that raises — a hung
     collective must crash (and restart from checkpoint) rather than stall
-    the whole pod.
+    the whole pod.  The time source is injectable (``clock=``), so the
+    straggler/watchdog policies are testable deterministically instead of
+    trusting a loaded CI host to sleep precisely.
   * data-pipeline integration — the batch iterator is any callable
     ``next_batch(step) -> pytree``; deterministic per-step batches make
     restart reproducible (tested: loss trajectory identical across a
@@ -61,8 +63,13 @@ def run_training(
     *,
     preemption_signal: Callable[[], bool] = lambda: False,
     log: Callable[[str], None] = print,
+    clock: Callable[[], float] = time.time,
 ) -> Tuple[Any, OptState, LoopReport]:
-    """Run (or resume) training to cfg.total_steps."""
+    """Run (or resume) training to cfg.total_steps.
+
+    ``clock`` is the step-timing source (monotone seconds); tests inject
+    a fake one to drive the straggler/watchdog policies deterministically.
+    """
     # ---------------------------------------------------------------- resume
     start_step = 0
     latest = store.latest_step()
@@ -80,13 +87,13 @@ def run_training(
     step = start_step
     while step < cfg.total_steps:
         batch = next_batch(step)
-        t0 = time.time()
+        t0 = clock()
         params, opt_state, metrics = train_step(params, opt_state, batch)
         # block for honest step timing (and to surface async failures here,
         # where the checkpoint/restart machinery can handle them)
         metrics_host = {k: float(v) for k, v in
                         jax.device_get(metrics).items()}
-        dt = time.time() - t0
+        dt = clock() - t0
         step += 1
 
         # ------------------------------------------------------ straggler

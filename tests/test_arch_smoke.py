@@ -99,7 +99,7 @@ def test_decode_matches_train_forward(arch):
 
 def test_param_counts_match_analytic():
     """ModelConfig.param_count must agree with the real spec tree."""
-    from repro.models.layers import is_def, param_bytes
+    from repro.models.layers import is_def
     from repro.models.transformer import model_spec
 
     for arch in all_archs():

@@ -1,0 +1,125 @@
+"""benchmarks.check_regression: the CI bench-gate must catch slowdowns.
+
+The one behavior the gate exists for: an injected 2x slowdown on any
+gated throughput metric fails the run.  And the one behavior that keeps
+it trustworthy as a required CI step: identical numbers (or noise under
+the threshold, or metrics it deliberately does not gate) pass.
+"""
+import copy
+import json
+
+import pytest
+
+from benchmarks.check_regression import compare, main, metrics
+
+
+def _serve_doc():
+    return {
+        "bench": "summarizer_pod_serve",
+        "rows": [
+            {"sessions": 1, "items_per_sec": 10000.0, "wall_s": 0.5,
+             "us_per_item": 100.0},
+            {"sessions": 64, "items_per_sec": 80000.0, "wall_s": 0.4,
+             "us_per_item": 12.5},
+        ],
+        "heterogeneous": {"mixed_over_uniform": 1.1},
+    }
+
+
+def _oracle_doc():
+    return {"rows": [{"backend": "jnp", "ms": 2.0},
+                     {"backend": "pallas-interpret", "ms": None}]}
+
+
+def test_gated_metric_selection():
+    m = metrics(_serve_doc())
+    assert set(m) == {"rows[0].items_per_sec", "rows[1].items_per_sec"}
+    assert all(d == "higher" for _, d in m.values())
+    mo = metrics(_oracle_doc())
+    assert set(mo) == {"rows[0].ms"}  # null (untimed) rows skipped
+    assert mo["rows[0].ms"] == (2.0, "lower")
+
+
+def test_identical_runs_pass():
+    rows = compare(_serve_doc(), _serve_doc())
+    assert rows and all(r["ok"] for r in rows)
+
+
+def test_injected_2x_slowdown_fails():
+    slow = copy.deepcopy(_serve_doc())
+    for row in slow["rows"]:
+        row["items_per_sec"] /= 2.0  # the injected regression
+    rows = compare(_serve_doc(), slow)
+    bad = [r for r in rows if not r["ok"]]
+    assert len(bad) == 2
+    assert all(r["ratio"] == pytest.approx(0.5) for r in bad)
+    # lower-is-better metrics catch it too: ms doubling == half speed
+    slow_o = {"rows": [{"backend": "jnp", "ms": 4.0}, {"ms": None}]}
+    rows_o = compare(_oracle_doc(), slow_o)
+    assert [r["ok"] for r in rows_o] == [False]
+
+
+def test_noise_under_threshold_passes_over_fails():
+    base = _serve_doc()
+    wobble = copy.deepcopy(base)
+    for row in wobble["rows"]:
+        row["items_per_sec"] *= 0.80  # -20% < the 25% gate
+    assert all(r["ok"] for r in compare(base, wobble))
+    worse = copy.deepcopy(base)
+    for row in worse["rows"]:
+        row["items_per_sec"] *= 0.70  # -30% > the 25% gate
+    assert not all(r["ok"] for r in compare(base, worse))
+    # a tighter custom threshold flips the verdict
+    assert not all(r["ok"] for r in compare(base, wobble,
+                                            max_regression=0.1))
+
+
+def test_added_and_removed_metrics_never_fail_the_gate():
+    base, fresh = _serve_doc(), _serve_doc()
+    fresh = copy.deepcopy(fresh)
+    fresh["rows"].append({"sessions": 128, "items_per_sec": 9.0})
+    rows = compare(base, fresh)
+    assert all(r["ok"] for r in rows)
+    assert any(r["note"] == "new metric (no baseline)" for r in rows)
+    rows_rm = compare(fresh, base)
+    assert all(r["ok"] for r in rows_rm)
+    assert any(r["note"] == "missing in fresh run" for r in rows_rm)
+
+
+def test_cli_end_to_end(tmp_path, capsys):
+    """The exact invocation CI runs: explicit files, table printed,
+    exit 0 on parity and 1 on a 2x slowdown."""
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps(_serve_doc()))
+    fresh.write_text(json.dumps(_serve_doc()))
+    rc = main(["--fresh", str(fresh), "--baseline", str(base)])
+    out = capsys.readouterr().out
+    assert rc == 0 and "OK" in out and "items_per_sec" in out
+
+    slow = _serve_doc()
+    slow["rows"][0]["items_per_sec"] /= 2.0
+    fresh.write_text(json.dumps(slow))
+    rc = main(["--fresh", str(fresh), "--baseline", str(base)])
+    out = capsys.readouterr().out
+    assert rc == 1 and "REGRESSED" in out and "0.50x" in out
+
+
+def test_from_git_reads_committed_baseline():
+    """The --from-git plumbing reads the committed copy: it must parse
+    the repo's own BENCH_serve.json at HEAD and gate it cleanly against
+    itself (deliberately NOT against the working tree — a locally
+    re-run bench must not fail tier-1 on a slow laptop)."""
+    from benchmarks.check_regression import baseline_from_git
+    from pathlib import Path
+
+    doc = baseline_from_git(Path("BENCH_serve.json"), "HEAD")
+    assert doc is not None and "rows" in doc
+    assert metrics(doc), "committed baseline carries no gated metrics"
+    assert all(r["ok"] for r in compare(doc, doc))
+
+
+def test_cli_missing_git_baseline_is_skipped(tmp_path):
+    f = tmp_path / "BENCH_brandnew.json"
+    f.write_text(json.dumps(_serve_doc()))
+    assert main(["--fresh", str(f), "--from-git", "HEAD"]) == 0

@@ -1,7 +1,4 @@
 """CheckpointStore: commit semantics, restart, GC, async, resharding."""
-import json
-import shutil
-import threading
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +29,32 @@ def test_save_load_roundtrip(tmp_path):
         lambda a, b: np.testing.assert_array_equal(np.asarray(a),
                                                    np.asarray(b)),
         t, loaded)
+
+
+def test_memory_store_mirrors_disk_semantics():
+    """The in-memory store (the pod-handoff snapshot path) matches the
+    disk store's surface: save/load round-trip incl. bf16 leaves and
+    extra metadata, latest_step, keep-GC, and a no-op async pair."""
+    from repro.ckpt import MemoryStore
+
+    store = MemoryStore(keep=2)
+    t = tree()
+    store.save(3, t, {"pod": "A"})
+    store.save_async(7, t)
+    store.wait()
+    assert store.latest_step() == 7 and store.committed_steps() == [3, 7]
+    like = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    loaded, extra = store.load(3, like)
+    assert extra == {"pod": "A"}
+    jax.tree_util.tree_map(
+        lambda a, b: (np.testing.assert_array_equal(np.asarray(a),
+                                                    np.asarray(b)),
+                      None if a.dtype == b.dtype else pytest.fail(
+                          f"dtype {a.dtype} != {b.dtype}")),
+        t, loaded)
+    store.save(9, t)  # keep=2 GCs step 3
+    assert store.committed_steps() == [7, 9]
 
 
 def test_torn_save_is_ignored(tmp_path):

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.train.compress import (Compressor, _dequantize, _quantize,
-                                  reference_reduce)
+from repro.train.compress import Compressor, _dequantize, _quantize
 
 
 def test_quantize_roundtrip_error_bounded():

@@ -1,8 +1,6 @@
 """Unit + property tests for the incremental log-det objective."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import KernelConfig, LogDet, naive_logdet

@@ -1,7 +1,6 @@
 """Property-based tests (hypothesis) on system invariants: distributed
 merge dominance, ladder soundness under arbitrary parameters, checkpoint
 round-trip for arbitrary pytree shapes."""
-import dataclasses
 
 import hypothesis.strategies as st
 import jax

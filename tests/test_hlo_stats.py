@@ -1,7 +1,6 @@
 """Collective-bytes parser: synthetic HLO lines + a real lowered module."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_stats import collective_stats
 

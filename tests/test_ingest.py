@@ -248,6 +248,64 @@ def test_buffer_get_min_items_waits_for_fill():
     t.join(timeout=10.0)
 
 
+def test_buffer_quiesce_parks_then_releases_fifo():
+    """A quiesced session keeps receiving but stops draining — nothing
+    dropped — and its backlog comes out in order on release; extract
+    hands the backlog over (for migration) in FIFO order too."""
+    buf = TaggedBuffer(capacity=32)
+    buf.put([1, 2, 1], np.asarray([[0.], [10.], [1.]], np.float32))
+    buf.quiesce([1])
+    buf.put([1, 2], np.asarray([[2.], [11.]], np.float32))  # still fed
+    s, x = buf.get(8)  # only session 2 drains
+    np.testing.assert_array_equal(s, [2, 2])
+    np.testing.assert_array_equal(x[:, 0], [10.0, 11.0])
+    assert buf.depths() == {1: 3} and buf.quiesced() == {1}
+    assert not buf.drop_counts()
+    buf.release([1])
+    s, x = buf.get(8)
+    np.testing.assert_array_equal(s, [1, 1, 1])
+    np.testing.assert_array_equal(x[:, 0], [0.0, 1.0, 2.0])  # FIFO intact
+    # extract: the migration path removes the backlog atomically
+    buf.put([3, 3, 4], np.asarray([[5.], [6.], [7.]], np.float32))
+    buf.quiesce([3])
+    es, ex = buf.extract([3])
+    np.testing.assert_array_equal(es, [3, 3])
+    np.testing.assert_array_equal(np.stack(ex)[:, 0], [5.0, 6.0])
+    assert buf.size == 1 and buf.quiesced() == set()
+    # inject bypasses closed/capacity: relocation is not production
+    buf.close()
+    buf.inject(es, ex)
+    s, x = buf.get(8)
+    np.testing.assert_array_equal(sorted(s.tolist()), [3, 3, 4])
+
+
+def test_buffer_quiesce_interacts_with_min_items_and_drop_oldest():
+    """Quiesced backlog neither satisfies ``min_items`` nor gets clipped
+    by drop-oldest while any other queue can pay instead."""
+    buf = TaggedBuffer(capacity=16)
+    buf.put([5] * 3, np.zeros((3, 1), np.float32))
+    buf.quiesce([5])
+    with pytest.raises(TimeoutError):  # 3 parked items don't count
+        buf.get(4, min_items=2, timeout=0.05)
+    buf.put([6], np.ones((1, 1), np.float32))
+    s, _ = buf.get(4, min_items=1, timeout=5.0)
+    np.testing.assert_array_equal(s, [6])
+    # drop-oldest spares the quiesced queue: session 8 (longest live)
+    # pays even though 7's parked queue is longer
+    buf2 = TaggedBuffer(capacity=6, policy="drop-oldest")
+    buf2.put([7] * 4 + [8] * 2, np.arange(6, dtype=np.float32)[:, None])
+    buf2.quiesce([7])
+    buf2.put([8], np.asarray([[9.0]], np.float32))
+    assert buf2.drop_counts() == {8: 1}
+    assert buf2.depths()[7] == 4  # the migrating session lost nothing
+    # ...unless only quiesced queues remain to clip
+    buf3 = TaggedBuffer(capacity=2, policy="drop-oldest")
+    buf3.put([9, 9], np.zeros((2, 1), np.float32))
+    buf3.quiesce([9])
+    buf3.put([10], np.ones((1, 1), np.float32))
+    assert buf3.drop_counts() == {9: 1}
+
+
 def test_buffer_get_pads_to_fixed_shape():
     buf = TaggedBuffer(capacity=8)
     buf.put([5, 5], np.ones((2, 3), np.float32))

@@ -1,13 +1,11 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
 swept over shapes and dtypes, plus integration against the core objective."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import KernelConfig, LogDet
 from repro.kernels import attention_ref, flash_attention, rbf_gain
-from repro.kernels.rbf_gain.ref import rbf_gain_ref
 
 
 # ---------------------------------------------------------------- rbf_gain

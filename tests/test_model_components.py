@@ -1,6 +1,5 @@
 """Component-level model tests: SSD vs naive recurrence, MoE dense vs
 dispatch, chunked attention vs oracle, RoPE properties."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import attention_ref
 from repro.models.attention import chunked_attention
-from repro.models.config import ModelConfig, MoEConfig, SSMConfig
+from repro.models.config import ModelConfig, MoEConfig
 from repro.models.layers import apply_rope
 from repro.models.mamba import ssd, ssd_reference
 from repro.models.moe import apply_moe, moe_spec

@@ -4,8 +4,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch import sharding as shd

@@ -11,7 +11,7 @@ import pytest
 
 from repro.ckpt import CheckpointStore
 from repro.core.api import make
-from repro.serve import PodState, SummarizerPod
+from repro.serve import SummarizerPod
 
 
 def _pod(S=8, C=16, K=5, d=6, **kw):

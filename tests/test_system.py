@@ -1,12 +1,9 @@
 """End-to-end system tests: launchers, dry-run cell construction on a tiny
 mesh, input specs coverage, config registry integrity."""
-import dataclasses
 import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.configs import all_archs, get_config
 from repro.launch.inputs import SHAPES, cell_applicable, input_specs

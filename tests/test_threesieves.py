@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import Ladder, make, make_objective
+from repro.core import Ladder, make
 
 
 # ------------------------------------------------------- numpy reference

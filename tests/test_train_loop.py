@@ -3,7 +3,6 @@ straggler detection, microbatch grad-accum equivalence, int8 compression."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -75,16 +74,27 @@ def test_restart_is_reproducible(tmp_path, setup):
 
 
 def test_straggler_detection(tmp_path, setup):
+    """Deterministic (de-flaked): the loop's clock is injected, so step
+    durations are exact values rather than real sleeps racing a loaded
+    CI host — the old wall-clock version flagged spurious stragglers
+    whenever a neighbor step got descheduled for >4x the EMA."""
     model, params, opt_cfg, step, batch_fn = setup
-    import time
 
+    class FakeClock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clock = FakeClock()
     slow = {8}
 
     def slow_step(p, o, b):
         out = step(p, o, b)
         jax.block_until_ready(out[0])
-        if slow_step.calls in slow:
-            time.sleep(1.0)
+        # every step 'takes' exactly 0.1s on the fake clock, except the
+        # straggler, which takes 1.0s (10x — far beyond factor 4)
+        clock.t += 1.0 if slow_step.calls in slow else 0.1
         slow_step.calls += 1
         return out
 
@@ -94,7 +104,7 @@ def test_straggler_detection(tmp_path, setup):
     cfg = LoopConfig(total_steps=12, ckpt_every=100, log_every=100,
                      straggler_factor=4.0)
     _, _, rep = run_training(slow_step, params, opt, batch_fn, store, cfg,
-                             log=lambda s: None)
+                             log=lambda s: None, clock=clock)
     assert rep.stragglers == [9]  # 1-indexed step after the slow call
 
 
