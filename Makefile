@@ -4,7 +4,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: verify lint bench-oracle bench-serve bench-ingest bench-autoscale \
-	bench-gate bench
+	bench-podstep bench-gate bench
 
 # tier-1: the gate every PR must keep green.  JUNIT=<path> additionally
 # writes a junit XML report (CI uploads it as an artifact).
@@ -32,11 +32,15 @@ bench-ingest:
 bench-autoscale:
 	python -m benchmarks.autoscale_bench --smoke --json BENCH_autoscale.json
 
+# fused pod-step (one launch per chunk) vs per-session dispatch loop
+bench-podstep:
+	python -m benchmarks.podstep_bench --smoke --json BENCH_podstep.json
+
 # bench-regression gate: diff the fresh BENCH_*.json in the working tree
 # against the committed baselines (git HEAD); >25% slowdown fails.
 # CI runs one file per matrix job: make bench-gate BENCHES=BENCH_serve.json
 BENCHES ?= BENCH_oracle.json BENCH_serve.json BENCH_ingest.json \
-	BENCH_autoscale.json
+	BENCH_autoscale.json BENCH_podstep.json
 bench-gate:
 	python -m benchmarks.check_regression --fresh $(BENCHES) --from-git HEAD
 

@@ -1,0 +1,166 @@
+"""Fused vs unfused pod step: one launch per chunk vs one per session.
+
+The fused pod-step entry (``repro.kernels.pod_step.pod_step``) advances
+EVERY session in a pod with a single program — on TPU a single Pallas
+grid launch over the stacked (S, ...) axis, on CPU/GPU one vmapped
+XLA program.  The unfused baseline is the serving loop it replaces: one
+``ThreeSieves.run_batched`` dispatch per session per chunk, S dispatches
+per ingest.  The win is dispatch amortization, so the fused/unfused
+ratio must GROW with S.
+
+Grid: S in {1, 16, 64} x dtype in {float32, bfloat16}.  Each cell is
+timed as a median of 5 repeats, fused and unfused interleaved inside
+each repeat so host noise and thermal drift hit both sides equally.
+
+Gated metrics (see benchmarks/check_regression.py): the absolute
+``fused_items_per_sec`` / ``unfused_items_per_sec`` keys per row.  The
+``fused_over_unfused`` ratios — including the headline S=64 ratio the
+roadmap tracks — divide two noisy numbers and are recorded UNGATED.
+
+    PYTHONPATH=src python -m benchmarks.podstep_bench --json BENCH_podstep.json
+
+``--smoke`` shrinks iteration counts for CI; the (S, dtype) grid is
+identical so the amortization claim stays visible.  CPU numbers are
+relative (the compiled kernel targets TPU); the structure is the point.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import statistics
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.functions import KernelConfig, LogDet
+from repro.core.threesieves import ThreeSieves
+from repro.kernels.pod_step import pod_step
+
+
+def _stacked_state(algo, S: int):
+    """Heterogeneous per-slot rows: lengthscales alternate so the bench
+    exercises the per-session kernel-hyperparameter path, not a degenerate
+    uniform pod."""
+    scales = (1.5, 0.9, 2.0, 1.2)
+    states = [algo.init(algo.hyper(lengthscale=scales[s % len(scales)]))
+              for s in range(S)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def bench_pod_step(S: int, *, K: int, d: int, chunk: int, iters: int,
+                   dtype, repeats: int = 5, warmup: int = 2) -> dict:
+    f = LogDet(K=K, d=d, kernel=KernelConfig("rbf", 1.5), a=1.0,
+               dtype=dtype, backend="jnp")
+    algo = ThreeSieves(f, eps=1e-3, T=500)
+    stacked = _stacked_state(algo, S)
+    per_session = [jax.tree_util.tree_map(lambda x: x[s], stacked)
+                   for s in range(S)]
+
+    feed = [jax.random.normal(jax.random.PRNGKey(i), (S, chunk, d))
+            for i in range(warmup + iters)]
+    counts = jnp.full((S,), chunk, jnp.int32)
+
+    # fused: the whole pod in ONE program (vmapped jnp path on CPU; the
+    # Pallas grid launch when pod_step resolves to 'pallas' on TPU)
+    fused_fn = jax.jit(functools.partial(pod_step, algo, backend="jnp"))
+    # unfused: the loop pod_step replaces — S dispatches per chunk
+    one_fn = jax.jit(algo.run_batched)
+    one_count = jnp.asarray(chunk, jnp.int32)
+
+    def run_fused(state):
+        for X in feed[warmup:]:
+            state = fused_fn(state, X, counts)
+        jax.block_until_ready(state.ld.fval)
+        return state
+
+    def run_unfused(states):
+        for X in feed[warmup:]:
+            states = [one_fn(states[s], X[s], one_count)
+                      for s in range(S)]
+        jax.block_until_ready(states[-1].ld.fval)
+        return states
+
+    # warmup covers compile + the accept-heavy fill phase on both sides
+    st_f = stacked
+    st_u = list(per_session)
+    for X in feed[:warmup]:
+        st_f = fused_fn(st_f, X, counts)
+        st_u = [one_fn(st_u[s], X[s], one_count) for s in range(S)]
+    jax.block_until_ready((st_f.ld.fval, st_u[-1].ld.fval))
+
+    times_f, times_u = [], []
+    for _ in range(repeats):  # interleaved: noise hits both sides alike
+        t0 = time.perf_counter()
+        run_fused(st_f)
+        times_f.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_unfused(st_u)
+        times_u.append(time.perf_counter() - t0)
+    dt_f = statistics.median(times_f)
+    dt_u = statistics.median(times_u)
+
+    n_items = iters * S * chunk
+    return {
+        "sessions": S, "dtype": jnp.dtype(dtype).name,
+        "K": K, "d": d, "chunk": chunk,
+        "iters": iters, "repeats": repeats,
+        "fused_items_per_sec": round(n_items / dt_f, 1),
+        "unfused_items_per_sec": round(n_items / dt_u, 1),
+        "fused_over_unfused": round(dt_u / dt_f, 3),
+        "us_per_item_fused": round(1e6 * dt_f / n_items, 3),
+        "us_per_item_unfused": round(1e6 * dt_u / n_items, 3),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_podstep.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer iters, smaller chunk)")
+    ap.add_argument("--sessions", type=int, nargs="+", default=[1, 16, 64])
+    args = ap.parse_args()
+
+    K, d = 32, 32
+    chunk = 16 if args.smoke else 32
+    iters = 3 if args.smoke else 10
+
+    rows = []
+    for dtype in (jnp.float32, jnp.bfloat16):
+        for S in args.sessions:
+            r = bench_pod_step(S, K=K, d=d, chunk=chunk, iters=iters,
+                               dtype=dtype)
+            rows.append(r)
+            print(f"S={S:4d} {r['dtype']:>9s}  "
+                  f"fused {r['fused_items_per_sec']:>11.1f} items/s  "
+                  f"unfused {r['unfused_items_per_sec']:>11.1f} items/s  "
+                  f"x{r['fused_over_unfused']}")
+
+    # the headline the roadmap tracks: dispatch amortization at S=64
+    # (largest S actually benched when --sessions overrides the default)
+    s_max = max(r["sessions"] for r in rows)
+    headline = {
+        f"fused_over_unfused_s{s_max}_{r['dtype']}": r["fused_over_unfused"]
+        for r in rows if r["sessions"] == s_max
+    }
+
+    out = {
+        "bench": "pod_step_fused_vs_unfused",
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "note": "fused = one program per chunk for the whole pod; "
+                "unfused = one run_batched dispatch per session. Ratios "
+                "are ungated (quotients of noisy numbers); the absolute "
+                "*items_per_sec keys are what bench-gate guards.",
+        "rows": rows,
+        **headline,
+    }
+    Path(args.json).write_text(json.dumps(out, indent=1))
+    print(f"wrote {args.json}; " +
+          ", ".join(f"{k}: x{v}" for k, v in headline.items()))
+
+
+if __name__ == "__main__":
+    main()

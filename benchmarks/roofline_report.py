@@ -1,6 +1,12 @@
 """Aggregate experiments/dryrun/*.json into the §Roofline table.
 
     PYTHONPATH=src python -m benchmarks.roofline_report [--dir DIR] [--md]
+
+``--podstep`` appends the analytic HBM-traffic table for the fused
+pod-step kernel (kernels/pod_step): bytes moved per (session, chunk) by
+the fused grid cell — which holds feats/L/Linv VMEM-resident across the
+whole per-chunk accept loop — vs the unfused per-session dispatch loop,
+which re-streams the summary state through HBM on every loop iteration.
 """
 from __future__ import annotations
 
@@ -54,18 +60,79 @@ def fmt_table(rows: List[dict], md: bool = False) -> List[str]:
     return out
 
 
+def podstep_traffic(K: int, d: int, C: int, itemsize: int) -> dict:
+    """Analytic HBM bytes per (session, chunk) for the pod-step kernel.
+
+    Fused (one grid cell): chunk + feats + L + Linv stream in once, the
+    per-chunk accept loop mutates them in VMEM, and the summary streams
+    out once.  Unfused (vmap/run_batched under XLA): the while-loop
+    carry — feats, L, Linv — is HBM-resident between iterations, so each
+    of the C loop iterations re-reads feats + Linv for the gain pass and
+    re-writes the carry.  Scalar tables (a dozen int32/f32 per session)
+    are noise and omitted.
+    """
+    state = (K * d + 2 * K * K) * itemsize      # feats + L + Linv
+    chunk = C * d * itemsize
+    fused = chunk + 2 * state                    # in once, out once
+    unfused = chunk + state + C * 2 * state      # carry round-trips x C
+    # VMEM high-water per grid cell: padded in/out copies + the chunk
+    k_p, d_p, c_p = -(-K // 128) * 128, -(-d // 128) * 128, -(-C // 8) * 8
+    vmem = (c_p * d_p + 2 * (k_p * d_p + 2 * k_p * k_p)) * itemsize
+    return {
+        "K": K, "d": d, "C": C, "itemsize": itemsize,
+        "fused_bytes": fused, "unfused_bytes": unfused,
+        "traffic_ratio": round(unfused / fused, 1),
+        "vmem_cell_bytes": vmem,
+    }
+
+
+def fmt_podstep(md: bool = False) -> List[str]:
+    out = ["", "pod-step HBM traffic per (session, chunk) — analytic:"]
+    shapes = [(32, 32, 32), (64, 64, 32), (128, 128, 64), (256, 128, 64)]
+    if md:
+        out.append("| K | d | C | dtype | fused | unfused | ratio |"
+                   " VMEM/cell |")
+        out.append("|---|---|---|---|---|---|---|---|")
+    else:
+        out.append(f"{'K':>4s} {'d':>4s} {'C':>4s} {'dtype':>6s} "
+                   f"{'fused':>10s} {'unfused':>10s} {'ratio':>7s} "
+                   f"{'VMEM/cell':>10s}")
+    for K, d, C in shapes:
+        for name, size in (("f32", 4), ("bf16", 2)):
+            r = podstep_traffic(K, d, C, size)
+            cells = (f"{K} | {d} | {C} | {name} | {r['fused_bytes']:,} | "
+                     f"{r['unfused_bytes']:,} | {r['traffic_ratio']}x | "
+                     f"{r['vmem_cell_bytes'] / 2**20:.2f} MiB")
+            if md:
+                out.append(f"| {cells} |")
+            else:
+                out.append(
+                    f"{K:4d} {d:4d} {C:4d} {name:>6s} "
+                    f"{r['fused_bytes']:10,} {r['unfused_bytes']:10,} "
+                    f"{r['traffic_ratio']:6.1f}x "
+                    f"{r['vmem_cell_bytes'] / 2**20:8.2f}Mi")
+    out.append("ratio = unfused/fused HBM bytes; VMEM/cell is the padded "
+               "per-grid-cell high-water (budget ~16 MiB/core)")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="pod256")
     ap.add_argument("--tag", default="")
     ap.add_argument("--md", action="store_true")
+    ap.add_argument("--podstep", action="store_true",
+                    help="append the fused pod-step HBM-traffic table")
     args = ap.parse_args(argv)
     rows = load(Path(args.dir), args.mesh, args.tag)
     print(f"roofline table ({args.mesh}"
           + (f", tag={args.tag}" if args.tag else "") + f"): {len(rows)} cells")
     for line in fmt_table(rows, args.md):
         print(line)
+    if args.podstep:
+        for line in fmt_podstep(args.md):
+            print(line)
 
 
 if __name__ == "__main__":

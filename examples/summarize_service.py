@@ -3,10 +3,13 @@
 Eight tenants stream embeddings through one tagged queue; the pod hosts
 every session as one stacked device-resident state and advances them all
 in a single jitted program.  Tenants buy DIFFERENT budgets: half are on
-the pod-default plan, the rest bring their own ``SessionSpec`` (K/T/eps)
-— a "small" plan (K=4, coarse ladder) and a "pro" plan (K=16, fine
-ladder) — all sharing the same compiled program via per-slot traced
-hyperparams (DESIGN.md §9).  The driver exercises the full session
+the pod-default plan, the rest bring their own ``SessionSpec``
+(K/T/eps + kernel hyperparameters) — a "small" plan (K=4, coarse
+ladder, the batch-calibrated RBF lengthscale 1/(2 sqrt d)) and a "pro"
+plan (K=16, fine ladder, the stream-calibrated 1/sqrt d) — all sharing
+the same compiled program via per-slot traced hyperparams (DESIGN.md
+§9; the lengthscale/kernel-kind rows ride the same mechanism and feed
+the fused pod-step kernel, §11).  The driver exercises the full session
 lifecycle: admit (mixed specs), stream, drift-triggered reset (which
 keeps each tenant's budget), periodic readout incl. the per-slot spec
 rows, evict + slot reuse, and checkpoint/restore mid-stream.
@@ -20,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import CheckpointStore
-from repro.core import SessionSpec, make
+from repro.core import (SessionSpec, make, rbf_lengthscale_batch,
+                        rbf_lengthscale_stream)
 from repro.data import MixtureSpec, session_stream
 from repro.serve import SummarizerPod
 
@@ -34,10 +38,16 @@ algo = make(pod_spec)
 pod = SummarizerPod(algo=algo, sessions=S, chunk=CHUNK)
 state = pod.init()
 
+# plans differ in kernel hyperparameters too: "small" tenants summarize
+# finite uploads (batch-calibrated lengthscale 1/(2 sqrt d)), "pro"
+# tenants summarize open-ended streams (1/sqrt d).  Per-slot rows, one
+# compiled program — no recompile between admissions.
 PLANS = {
-    "default": None,  # pod spec: K=16, T=200, eps=1e-2
-    "small": pod_spec.replace(K=4, T=100, eps=5e-2),
-    "pro": pod_spec.replace(K=16, T=400, eps=1e-2),
+    "default": None,  # pod spec: K=16, T=200, eps=1e-2, lengthscale=2.0
+    "small": pod_spec.replace(K=4, T=100, eps=5e-2,
+                              lengthscale=rbf_lengthscale_batch(D)),
+    "pro": pod_spec.replace(K=16, T=400, eps=1e-2,
+                            lengthscale=rbf_lengthscale_stream(D)),
 }
 
 ingest = jax.jit(pod.ingest)
@@ -94,6 +104,7 @@ for s in range(S):
     sid = int(restored.sid[s])
     print(f"  slot {s}: sid={sid:4d} plan={plan_of.get(sid, '?'):8s} "
           f"K={int(ro.specs.k_cap[s]):3d} T={int(ro.specs.T[s]):4d} "
-          f"eps={float(ro.specs.eps[s]):.3f}  "
+          f"eps={float(ro.specs.eps[s]):.3f} "
+          f"ls={float(ro.specs.lengthscale[s]):.3f}  "
           f"selected={int(ro.n[s]):3d}  f(S)={float(ro.fval[s]):6.3f}  "
           f"resets={int(restored.resets[s])}")

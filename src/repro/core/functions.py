@@ -47,6 +47,17 @@ Array = jax.Array
 # Kernel functions
 # ---------------------------------------------------------------------------
 
+# Traced-kernel math lives in the cycle-free ``repro.kernelmath`` (shared
+# with the Pallas kernel bodies); re-exported here as the core API.
+from repro.kernelmath import (  # noqa: E402  (re-export)
+    KERNEL_KIND_IDS, KernelParams, pairwise_traced, traced_gain_rows)
+
+__all__ = [
+    "KERNEL_KIND_IDS", "KernelConfig", "KernelParams", "LogDet",
+    "LogDetState", "naive_logdet", "pairwise_traced",
+    "rbf_lengthscale_batch", "rbf_lengthscale_stream", "traced_gain_rows",
+]
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelConfig:
@@ -161,25 +172,47 @@ class LogDet:
         return (jnp.arange(self.K) < state.n).astype(self.dtype)
 
     # -- queries --------------------------------------------------------------
-    def gains(self, state: LogDetState, X: Array) -> Array:
+    def gains(self, state: LogDetState, X: Array,
+              kern: KernelParams | None = None) -> Array:
         """Marginal gains Delta_f(x | S) for a batch X (B, d) -> (B,).
 
         One fused batch query — (K,B) kernel block, one (K,K)x(K,B) matmul —
-        dispatched through the pluggable ``GainOracle`` backend.
+        dispatched through the pluggable ``GainOracle`` backend.  ``kern``
+        (optional ``KernelParams``) switches the kernel hyperparameters
+        from trace constants to traced arrays — the sieve family passes
+        ``state.hp.kern`` so per-session kernels share one program.
         """
-        return self.oracle.gains(state.feats, state.Linv, state.n, X)
+        return self.oracle.gains(state.feats, state.Linv, state.n, X,
+                                 kern=kern)
 
-    def gain1(self, state: LogDetState, x: Array) -> Array:
+    def gain1(self, state: LogDetState, x: Array,
+              kern: KernelParams | None = None) -> Array:
         """Single-item marginal gain (d,) -> ()."""
-        return self.oracle.gain1(state.feats, state.Linv, state.n, x)
+        return self.oracle.gain1(state.feats, state.Linv, state.n, x,
+                                 kern=kern)
 
     # -- update ---------------------------------------------------------------
-    def append(self, state: LogDetState, x: Array) -> LogDetState:
-        """Add x to the summary (caller guarantees state.n < K)."""
+    def append(self, state: LogDetState, x: Array,
+               kern: KernelParams | None = None) -> LogDetState:
+        """Add x to the summary (caller guarantees state.n < K).
+
+        With ``kern`` the kernel row and the whitening matvec use the
+        traced-kernel row form (the exact op sequence the fused pod-step
+        kernel replays); without it the static ``KernelConfig`` path is
+        bit-frozen for the baselines.
+        """
         x = x.astype(self.dtype)
         mask = self._mask(state)
-        kx = self.kernel.pairwise(state.feats, x[None, :])[:, 0] * mask  # (K,)
-        c = state.Linv @ (self.a * kx)  # (K,)
+        if kern is None:
+            kx = self.kernel.pairwise(state.feats, x[None, :])[:, 0] * mask
+            c = state.Linv @ (self.a * kx)  # (K,)
+        else:
+            kx = pairwise_traced(x[None, :], state.feats, kern)[0] * mask
+            # multiply-reduce form of Linv @ (a * kx): unlike the (1, K)
+            # matvec, this lowering is bit-stable under vmap — the fused
+            # pod-step kernel (unbatched per grid cell) must match the
+            # vmapped session axis bit for bit
+            c = jnp.sum(state.Linv * (self.a * kx)[None, :], axis=-1)  # (K,)
         dd2 = jnp.maximum((1.0 + self.a) - jnp.sum(c * c), GAIN_EPS)
         dd = jnp.sqrt(dd2)
         gain = 0.5 * jnp.log(dd2)
@@ -202,9 +235,10 @@ class LogDet:
             n_queries=state.n_queries,
         )
 
-    def maybe_append(self, state: LogDetState, x: Array, take: Array) -> LogDetState:
+    def maybe_append(self, state: LogDetState, x: Array, take: Array,
+                     kern: KernelParams | None = None) -> LogDetState:
         """Conditionally append (vmap/select friendly)."""
-        appended = self.append(state, x)
+        appended = self.append(state, x, kern)
         return jax.tree_util.tree_map(
             lambda a, b: jnp.where(take, a, b), appended, state
         )

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -30,13 +31,31 @@ import jax.numpy as jnp
 from repro.constants import GAIN_EPS
 from repro.kernels.rbf_gain import DEFAULT_BLOCK_B, fused_gains
 
-from .functions import KernelConfig
+from .functions import KernelConfig, KernelParams, traced_gain_rows
 
 Array = jax.Array
 
 BACKENDS = ("auto", "jnp", "pallas", "pallas-interpret")
 
 _ENV_VAR = "REPRO_ORACLE_BACKEND"
+
+_warned_no_tpu = False
+
+
+def _warn_once_no_tpu(what: str) -> None:
+    """One process-wide warning when an explicit ``pallas`` request falls
+    back to ``jnp`` off-TPU — a silent fallback turns a missing/misdetected
+    TPU into an undiagnosable perf regression."""
+    global _warned_no_tpu
+    if _warned_no_tpu:
+        return
+    _warned_no_tpu = True
+    warnings.warn(
+        f"{what}: backend 'pallas' requested but jax.default_backend() is "
+        f"{jax.default_backend()!r}, not 'tpu' — falling back to the 'jnp' "
+        "path. The compiled Pallas kernel needs real TPU hardware; use "
+        "'pallas-interpret' to exercise the kernel logic anywhere.",
+        RuntimeWarning, stacklevel=3)
 
 
 def default_backend() -> str:
@@ -54,7 +73,9 @@ def resolve_backend(backend: str) -> str:
     ``auto`` picks the fused Pallas kernel on TPU and the jnp path
     elsewhere; an explicit ``pallas`` request also falls back to ``jnp``
     off-TPU (the compiled kernel needs real hardware — use
-    ``pallas-interpret`` to exercise the kernel logic anywhere).
+    ``pallas-interpret`` to exercise the kernel logic anywhere), but that
+    fallback emits one ``RuntimeWarning`` per process: a pallas request
+    quietly running jnp is a perf regression waiting to be mis-blamed.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} invalid; choose from {BACKENDS}")
@@ -62,6 +83,7 @@ def resolve_backend(backend: str) -> str:
     if backend == "auto":
         return "pallas" if on_tpu else "jnp"
     if backend == "pallas" and not on_tpu:
+        _warn_once_no_tpu("repro.core.oracle.resolve_backend")
         return "jnp"
     return backend
 
@@ -93,26 +115,46 @@ class GainOracle:
         return 1.0 / (2.0 * self.kernel.lengthscale**2)
 
     # ------------------------------------------------------------------ query
-    def gains(self, feats: Array, linv: Array, n: Array, X: Array) -> Array:
-        """feats (K, d), linv (K, K), n () live rows, X (B, d) -> (B,)."""
+    def gains(self, feats: Array, linv: Array, n: Array, X: Array,
+              kern: KernelParams | None = None) -> Array:
+        """feats (K, d), linv (K, K), n () live rows, X (B, d) -> (B,).
+
+        ``kern`` switches the kernel hyperparameters to traced arrays
+        (``KernelParams``): the row-major ``traced_gain_rows`` block on the
+        jnp path, the scalar-operand Pallas kernel otherwise.  Without it
+        the static ``KernelConfig`` arithmetic is kept bit-frozen.
+        """
         backend = self.resolved
         if backend == "jnp":
             X = X.astype(self.dtype)
             mask = (jnp.arange(feats.shape[0]) < n).astype(self.dtype)
+            if kern is not None:
+                return traced_gain_rows(X, feats, linv, mask[None, :],
+                                        a=self.a, kern=kern)[:, 0]
             KX = self.kernel.pairwise(feats, X) * mask[:, None]  # (K, B)
             C = linv @ (self.a * KX)  # (K, B)
             cn2 = jnp.sum(C * C, axis=0)  # (B,)
             dd2 = jnp.maximum((1.0 + self.a) - cn2, GAIN_EPS)
             return 0.5 * jnp.log(dd2)
+        if kern is not None:
+            from repro.kernels.rbf_gain import fused_gains_traced
+
+            return fused_gains_traced(
+                X, feats, linv, n, kern, a=self.a,
+                use_pallas=(backend == "pallas"),
+                interpret=(backend == "pallas-interpret"),
+                block_b=self.block_b,
+            ).astype(self.dtype)
         return fused_gains(
             X, feats, linv, n, a=self.a, inv2l2=self.inv2l2,
             kind=self.kernel.kind, use_pallas=(backend == "pallas"),
             interpret=(backend == "pallas-interpret"), block_b=self.block_b,
         ).astype(self.dtype)
 
-    def gain1(self, feats: Array, linv: Array, n: Array, x: Array) -> Array:
+    def gain1(self, feats: Array, linv: Array, n: Array, x: Array,
+              kern: KernelParams | None = None) -> Array:
         """Single-item query (d,) -> () — a B=1 batch."""
-        return self.gains(feats, linv, n, x[None, :])[0]
+        return self.gains(feats, linv, n, x[None, :], kern=kern)[0]
 
 
 def make(kernel: KernelConfig, a: float = 1.0, *,

@@ -81,8 +81,8 @@ class Salsa(StackedSieve):
 
     def _apply_item(self, state: SieveState, x: Array,
                     takes: Array) -> SieveState:
-        f = self.f
-        lds = jax.vmap(lambda ld, take: f.maybe_append(ld, x, take))(
+        f, kern = self.f, state.hp.kern
+        lds = jax.vmap(lambda ld, take: f.maybe_append(ld, x, take, kern))(
             state.lds, takes)
         nq = state.n_queries + jnp.sum(state.alive.astype(jnp.int32))
         peak = jnp.maximum(state.peak_mem, jnp.sum(lds.n))

@@ -102,19 +102,30 @@ class SieveAlgorithm:
     def default_hyper(self) -> HyperParams:
         """The dataclass fields as a traced-state row (the pod default)."""
         return HyperParams.build(K=self.f.K, T=int(getattr(self, "T", 1)),
-                                 eps=self.eps, m=self.f.singleton_value)
+                                 eps=self.eps, m=self.f.singleton_value,
+                                 lengthscale=self.f.kernel.lengthscale,
+                                 kernel_kind=self.f.kernel.kind)
 
-    def hyper(self, *, K=None, T=None, eps=None) -> HyperParams:
+    def hyper(self, *, K=None, T=None, eps=None, lengthscale=None,
+              kernel_kind=None) -> HyperParams:
         """Per-instance hyperparams for THIS compiled program, validated
         against its capacities (``None`` keeps the default).
 
         Raises ``ValueError`` when the requested budget cannot fit the
         fixed shapes: K beyond the K_max buffer rows, or (stacked sieves)
         an (eps, K) ladder with more rungs than the instance axis.
+        ``lengthscale``/``kernel_kind`` select the session's kernel (any
+        positive lengthscale and known kind fit any program — they are
+        pure state, no shape involved); the defaults are the objective's
+        construction-time ``KernelConfig``.
         """
         K = self.f.K if K is None else int(K)
         T = int(getattr(self, "T", 1)) if T is None else int(T)
         eps = self.eps if eps is None else float(eps)
+        if lengthscale is None:
+            lengthscale = self.f.kernel.lengthscale
+        if kernel_kind is None:
+            kernel_kind = self.f.kernel.kind
         if K > self.f.K:
             raise ValueError(
                 f"K={K} exceeds this program's summary capacity "
@@ -122,7 +133,9 @@ class SieveAlgorithm:
                 "K >= the largest tenant budget")
         self._check_hyper_capacity(K=K, eps=eps)
         return HyperParams.build(K=K, T=T, eps=eps,
-                                 m=self.f.singleton_value)
+                                 m=self.f.singleton_value,
+                                 lengthscale=lengthscale,
+                                 kernel_kind=kernel_kind)
 
     def _check_hyper_capacity(self, *, K: int, eps: float) -> None:
         """Hook: shape-capacity checks beyond K_max (stacked sieves add
@@ -229,8 +242,14 @@ class StackedSieve(SieveAlgorithm):
         raise NotImplementedError
 
     def _gains_all(self, state, X: Array) -> Array:
-        """One fused oracle pass per instance, vmapped: (n_inst, B)."""
-        return jax.vmap(lambda ld: self.f.gains(ld, X))(state.lds)
+        """One fused oracle pass per instance, vmapped: (n_inst, B).
+
+        The session's traced kernel (``state.hp.kern``) is shared by all
+        stacked instances — only (K, T, eps) vary per rung, never the
+        objective's kernel.
+        """
+        kern = state.hp.kern
+        return jax.vmap(lambda ld: self.f.gains(ld, X, kern))(state.lds)
 
     def insertions(self, state) -> Array:
         """Insertions across ALL stacked instances (per-rung ``n`` only
@@ -240,7 +259,8 @@ class StackedSieve(SieveAlgorithm):
     # ------------------------------------------------------------------ step
     def step(self, state, x: Array):
         """Process one stream item across all instances (lockstep vmap)."""
-        g = jax.vmap(lambda ld: self.f.gain1(ld, x))(state.lds)  # (n_inst,)
+        kern = state.hp.kern
+        g = jax.vmap(lambda ld: self.f.gain1(ld, x, kern))(state.lds)
         takes = (g >= self._thresholds(state)) & self._can_accept(state)
         return self._apply_item(state, x, takes)
 

@@ -87,8 +87,8 @@ class SieveStreaming(StackedSieve):
 
     def _apply_item(self, state: SieveState, x: Array,
                     takes: Array) -> SieveState:
-        f = self.f
-        lds = jax.vmap(lambda ld, take: f.maybe_append(ld, x, take))(
+        f, kern = self.f, state.hp.kern
+        lds = jax.vmap(lambda ld, take: f.maybe_append(ld, x, take, kern))(
             state.lds, takes)
 
         if self.plus_plus:

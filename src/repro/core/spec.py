@@ -29,11 +29,13 @@ to the statically-configured ones.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernelmath import KERNEL_KIND_IDS, KernelParams
 from .thresholds import Ladder
 
 Array = jax.Array
@@ -57,15 +59,43 @@ class HyperParams:
     # with the weak-typed ``jnp.power(1.0 + eps, ...)`` of the static path)
     ihi: Array  # () int32 — top rung index of the geometric ladder
     num_rungs: Array  # () int32 — live rung count (<= the program's cap)
+    lengthscale: Array  # () float32 — kernel lengthscale (informational)
+    inv2l2: Array  # () float32 — 1/(2 l^2), derived ONCE on host in float64
+    kernel_kind: Array  # () int32 — KERNEL_KIND_IDS id of the kernel
+
+    @property
+    def kern(self) -> KernelParams:
+        """The traced kernel hyperparameters as a ``KernelParams``."""
+        return KernelParams(inv2l2=self.inv2l2, kind_id=self.kernel_kind)
 
     @classmethod
-    def build(cls, *, K: int, T: int, eps: float, m: float) -> "HyperParams":
-        """Host-side constructor: validates, derives the ladder bounds in
-        float64, and freezes everything into () arrays."""
+    def build(cls, *, K: int, T: int, eps: float, m: float,
+              lengthscale: float = 1.0,
+              kernel_kind: Union[str, int] = "rbf") -> "HyperParams":
+        """Host-side constructor: validates, derives the ladder bounds and
+        the kernel constant in float64, and freezes everything into ()
+        arrays.  ``kernel_kind`` accepts a name or a ``KERNEL_KIND_IDS``
+        id."""
         if int(T) < 1:
             raise ValueError(f"T must be >= 1 (got {T!r}): ThreeSieves "
                              "discards a threshold after T consecutive "
                              "rejections, and T = 0 divides by zero")
+        if isinstance(kernel_kind, str):
+            if kernel_kind not in KERNEL_KIND_IDS:
+                raise ValueError(
+                    f"unknown kernel kind {kernel_kind!r}; choose from "
+                    f"{sorted(KERNEL_KIND_IDS)}")
+            kind_id = KERNEL_KIND_IDS[kernel_kind]
+        else:
+            kind_id = int(kernel_kind)
+            if kind_id not in KERNEL_KIND_IDS.values():
+                raise ValueError(
+                    f"unknown kernel kind id {kind_id!r}; known ids: "
+                    f"{sorted(KERNEL_KIND_IDS.values())}")
+        ls = float(lengthscale)
+        if not (math.isfinite(ls) and ls > 0.0):
+            raise ValueError(f"lengthscale must be a positive finite "
+                             f"number, got {lengthscale!r}")
         lad = Ladder(eps=float(eps), m=float(m), K=int(K))  # validates eps/K
         return cls(
             k_cap=jnp.int32(K),
@@ -74,6 +104,9 @@ class HyperParams:
             base=jnp.float32(1.0 + float(eps)),
             ihi=jnp.int32(lad.ihi),
             num_rungs=jnp.int32(lad.num_rungs),
+            lengthscale=jnp.float32(ls),
+            inv2l2=jnp.float32(1.0 / (2.0 * ls * ls)),
+            kernel_kind=jnp.int32(kind_id),
         )
 
 
@@ -119,6 +152,14 @@ class SessionSpec:
             raise ValueError(f"d must be >= 1, got {self.d!r}")
         if int(self.c) < 1:
             raise ValueError(f"c must be >= 1, got {self.c!r}")
+        if self.kernel_kind not in KERNEL_KIND_IDS:
+            raise ValueError(f"unknown kernel kind {self.kernel_kind!r}; "
+                             f"choose from {sorted(KERNEL_KIND_IDS)}")
+        if self.lengthscale is not None:
+            ls = float(self.lengthscale)
+            if not (_math.isfinite(ls) and ls > 0.0):
+                raise ValueError(f"lengthscale must be a positive finite "
+                                 f"number, got {self.lengthscale!r}")
 
     def replace(self, **kw) -> "SessionSpec":
         return dataclasses.replace(self, **kw)

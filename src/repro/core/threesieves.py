@@ -84,11 +84,11 @@ class ThreeSieves(SieveAlgorithm):
         """Process one stream item (lines 4-12 of Algorithm 1)."""
         f, hp = self.f, state.hp
         ld = state.ld
-        gain = f.gain1(ld, x)
+        gain = f.gain1(ld, x, hp.kern)
         thr = self._threshold(ld, state.j, hp)
         accept = (gain >= thr) & (ld.n < hp.k_cap)
 
-        ld2 = f.maybe_append(ld, x, accept)
+        ld2 = f.maybe_append(ld, x, accept, hp.kern)
         # reject branch: t += 1; if t >= T: lower rung, t = 0
         t_rej = state.t + 1
         lower = t_rej >= hp.T
@@ -141,7 +141,7 @@ class ThreeSieves(SieveAlgorithm):
             ld, j, t, cursor, gains, valid, n_fused = carry
 
             def recompute():
-                return f.gains(ld, X), n_fused + 1
+                return f.gains(ld, X, hp.kern), n_fused + 1
 
             gains, n_fused = jax.lax.cond(
                 valid, lambda: (gains, n_fused), recompute)
@@ -164,7 +164,7 @@ class ThreeSieves(SieveAlgorithm):
                 def on_accept():
                     rstar = istar - cursor
                     j2 = jnp.minimum(j + (t + rstar) // T, nr - 1)
-                    ld2 = f.append(ld, X[istar])
+                    ld2 = f.append(ld, X[istar], hp.kern)
                     return (ld2, j2, jnp.int32(0), istar + 1,
                             gains, False, n_fused)
 

@@ -80,6 +80,20 @@ class Ladder:
         return jnp.power(1.0 + self.eps, self.ihi - i).astype(dtype)
 
 
+def rung_value(base, ihi, num_rungs, j, dtype=jnp.float32):
+    """Threshold at rung ``j`` from traced ladder scalars — the one rung
+    formula: clamp to the live rung range, ``base ** (ihi - j)`` in f32,
+    deliver in ``dtype``.
+
+    Module-level so the Pallas pod-step kernel and ``TracedLadder.value``
+    share the exact op sequence (the fused/unfused f32 bit-equality pin
+    includes the threshold bits).
+    """
+    jc = jnp.clip(j, 0, num_rungs - 1)
+    v = jnp.power(base, (ihi - jc).astype(jnp.float32))
+    return v.astype(dtype)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class TracedLadder:
@@ -103,9 +117,7 @@ class TracedLadder:
     def value(self, j, dtype=jnp.float32):
         """Threshold at rung j (clamped); rung geometry in f32, result in
         ``dtype`` so the accept comparison runs in the objective's dtype."""
-        jc = jnp.clip(j, 0, self.num_rungs - 1)
-        v = jnp.power(self.base, (self.ihi - jc).astype(jnp.float32))
-        return v.astype(dtype)
+        return rung_value(self.base, self.ihi, self.num_rungs, j, dtype)
 
     def values(self, cap: int, dtype=jnp.float32):
         """Materialized rungs for a ``cap``-instance program, descending.

@@ -1,0 +1,6 @@
+from .kernel import FLT_COLS, INT_COLS, pod_step_pallas
+from .ops import (BACKENDS, default_backend, fusable, pod_step, resolve)
+from .ref import pod_step_ref
+
+__all__ = ["BACKENDS", "FLT_COLS", "INT_COLS", "default_backend", "fusable",
+           "pod_step", "pod_step_pallas", "pod_step_ref", "resolve"]

@@ -1,0 +1,21 @@
+"""jnp reference for the fused pod step: the unfused session-axis vmap.
+
+This IS the semantics the Pallas kernel is pinned against — one
+``ThreeSieves.run_batched`` per session slot, batched by ``jax.vmap``
+over the stacked (S, ...) state exactly as ``serve.summarize`` has always
+stepped the pod.
+"""
+from __future__ import annotations
+
+import jax
+
+Array = jax.Array
+
+
+def pod_step_ref(algo, state, chunks: Array, counts: Array):
+    """Advance every session by one chunk, unfused.
+
+    algo: the pod's sieve algorithm (static); state: the stacked per-slot
+    algorithm state; chunks (S, C, d); counts (S,) valid prefix lengths.
+    """
+    return jax.vmap(algo.run_batched)(state, chunks, counts)

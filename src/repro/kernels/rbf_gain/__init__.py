@@ -1,6 +1,8 @@
-from .kernel import DEFAULT_BLOCK_B, KERNEL_KINDS, gain_pallas
-from .ops import fused_gains, rbf_gain
+from .kernel import (DEFAULT_BLOCK_B, KERNEL_KINDS, gain_pallas,
+                     gain_pallas_traced)
+from .ops import fused_gains, fused_gains_traced, rbf_gain
 from .ref import gain_ref, rbf_gain_ref
 
-__all__ = ["DEFAULT_BLOCK_B", "KERNEL_KINDS", "fused_gains", "gain_pallas",
+__all__ = ["DEFAULT_BLOCK_B", "KERNEL_KINDS", "fused_gains",
+           "fused_gains_traced", "gain_pallas", "gain_pallas_traced",
            "gain_ref", "rbf_gain", "rbf_gain_ref"]

@@ -28,8 +28,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.constants import GAIN_EPS, NORM_EPS
+from repro.kernelmath import KernelParams, traced_gain_rows
 
 DEFAULT_BLOCK_B = 256
 
@@ -103,3 +105,51 @@ def rbf_gain_pallas(x, feats, linv, mask, *, a: float, inv2l2: float,
     """Back-compat alias for the rbf-only entry point."""
     return gain_pallas(x, feats, linv, mask, a=a, inv2l2=inv2l2, kind="rbf",
                        block_b=block_b, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# Traced-kernel variant: lengthscale / kind as SCALAR OPERANDS (SMEM), so
+# per-session kernels need no recompile — the kernel body is the shared
+# ``kernelmath.traced_gain_rows`` op sequence.
+# --------------------------------------------------------------------------
+
+
+def _gain_kernel_traced(x_ref, feats_ref, linv_ref, mask_ref, inv2l2_ref,
+                        kind_ref, out_ref, *, a: float):
+    kern = KernelParams(inv2l2=inv2l2_ref[0, 0], kind_id=kind_ref[0, 0])
+    out_ref[...] = traced_gain_rows(
+        x_ref[...], feats_ref[...], linv_ref[...], mask_ref[...],
+        a=a, kern=kern)
+
+
+@functools.partial(jax.jit, static_argnames=("a", "block_b", "interpret"))
+def gain_pallas_traced(x, feats, linv, mask, inv2l2, kind_id, *, a: float,
+                       block_b: int = DEFAULT_BLOCK_B,
+                       interpret: bool = False):
+    """``gain_pallas`` with the kernel hyperparameters as (1, 1) scalar
+    operands (inv2l2 f32, kind_id int32) instead of trace constants.
+
+    Same padding contract as ``gain_pallas``; scalars live in SMEM on
+    hardware (the interpreter ignores memory spaces).
+    """
+    B, d = x.shape
+    K = feats.shape[0]
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+
+    return pl.pallas_call(
+        functools.partial(_gain_kernel_traced, a=a),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),  # X: stream blocks
+            pl.BlockSpec((K, d), lambda i: (0, 0)),  # summary: resident
+            pl.BlockSpec((K, K), lambda i: (0, 0)),  # Linv:   resident
+            pl.BlockSpec((1, K), lambda i: (0, 0)),  # mask:   resident
+            smem((1, 1), lambda i: (0, 0)),  # inv2l2: scalar
+            smem((1, 1), lambda i: (0, 0)),  # kind:   scalar
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(x, feats, linv, mask, inv2l2, kind_id)

@@ -13,7 +13,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import DEFAULT_BLOCK_B, gain_pallas
+from repro.kernelmath import traced_gain_rows
+
+from .kernel import DEFAULT_BLOCK_B, gain_pallas, gain_pallas_traced
 from .ref import gain_ref
 
 
@@ -62,6 +64,44 @@ def fused_gains(x, feats, linv, n, *, a: float, inv2l2: float,
     maskp = _pad_to(mask, 128, 1)
     out = gain_pallas(xp, featsp, linvp, maskp, a=a, inv2l2=inv2l2, kind=kind,
                       block_b=bb, interpret=interpret)
+    return out[:B, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("a", "use_pallas", "interpret",
+                                             "block_b"))
+def fused_gains_traced(x, feats, linv, n, kern, *, a: float,
+                       use_pallas: bool = False, interpret: bool = False,
+                       block_b: int = DEFAULT_BLOCK_B):
+    """``fused_gains`` with traced kernel hyperparameters.
+
+    ``kern`` is a ``kernelmath.KernelParams`` (inv2l2 () f32, kind_id ()
+    int32) passed as ARRAYS: a pod admitting a tenant with its own
+    lengthscale/kind never recompiles this program.  Same shapes and
+    padding contract as ``fused_gains``.
+    """
+    B = x.shape[0]
+    K = feats.shape[0]
+    mask = (jnp.arange(K) < n).astype(jnp.float32)[None, :]  # (1, K)
+
+    if not (use_pallas or interpret):
+        return traced_gain_rows(x.astype(jnp.float32),
+                                feats.astype(jnp.float32),
+                                linv.astype(jnp.float32), mask,
+                                a=a, kern=kern)[:, 0]
+
+    bb = min(block_b, _round_up(B, 8))
+    bb = max(8, bb - bb % 8)
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 128, 1), bb, 0)
+    featsp = _pad_to(_pad_to(feats.astype(jnp.float32), 128, 1), 128, 0)
+    Kp = featsp.shape[0]
+    linvp = jnp.zeros((Kp, Kp), jnp.float32).at[:K, :K].set(
+        linv.astype(jnp.float32))
+    maskp = _pad_to(mask, 128, 1)
+    out = gain_pallas_traced(
+        xp, featsp, linvp, maskp,
+        kern.inv2l2.astype(jnp.float32).reshape(1, 1),
+        kern.kind_id.astype(jnp.int32).reshape(1, 1),
+        a=a, block_b=bb, interpret=interpret)
     return out[:B, 0]
 
 

@@ -372,7 +372,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
 
 def run_summarizer_pod_cell(multi_pod: bool, out_dir: Path, *,
                             sessions_per_shard: int = 16, chunk: int = 1024,
-                            K: int = 100, d: int = 256) -> dict:
+                            K: int = 100, d: int = 256,
+                            podstep_backend: str | None = None) -> dict:
     """The ``paper-summarizer__pod*`` cell: the SummarizerPod's real
     lowered program on the production mesh.
 
@@ -400,9 +401,16 @@ def run_summarizer_pod_cell(multi_pod: bool, out_dir: Path, *,
     ``admit(state, sid, spec=HyperParams)`` with the hyperparams as
     *arguments* — proving a new tenant budget costs one masked
     row-select, not a compile.
+
+    ``podstep_backend`` selects the pod's chunk-advance implementation
+    (``kernels.pod_step.BACKENDS``; None = ``REPRO_PODSTEP_BACKEND`` /
+    auto): on a TPU mesh the auto default lowers the fused single-launch
+    pod-step kernel into the hot path; elsewhere the vmapped reference.
+    The resolved choice is recorded in the cell result.
     """
     from repro.core.api import make
     from repro.data import DistributedSummarizer
+    from repro.kernels.pod_step import resolve as resolve_podstep
     from repro.serve.summarize import SummarizerPod
 
     mesh_name = "pod512" if multi_pod else "pod256"
@@ -419,7 +427,8 @@ def run_summarizer_pod_cell(multi_pod: bool, out_dir: Path, *,
     N_tot = S_tot * chunk  # every session can fill its routing capacity
 
     algo = make("threesieves", K=K, d=d, T=5000, eps=1e-3)
-    pod = SummarizerPod(algo=algo, sessions=sessions_per_shard, chunk=chunk)
+    pod = SummarizerPod(algo=algo, sessions=sessions_per_shard, chunk=chunk,
+                        podstep_backend=podstep_backend)
     pod_global = dataclasses.replace(pod, sessions=S_tot)
 
     state = jax.eval_shape(pod_global.init)
@@ -517,7 +526,8 @@ def run_summarizer_pod_cell(multi_pod: bool, out_dir: Path, *,
             "shards": P_shards, "total_sessions": S_tot,
             "chunk_per_session": chunk, "items_per_ingest": N_tot,
             "mesh": dict(mesh.shape),
-            "heterogeneous_specs": True,  # per-slot (K, T, eps) rows traced
+            "heterogeneous_specs": True,  # per-slot rows incl. kernel hp
+            "podstep_backend": resolve_podstep(podstep_backend, algo),
             "pod_ingest": res_u, "pod_ingest_prerouted": res_pre,
             "readout": res_r, "admit_spec": res_adm, "merge": res_m,
         }

@@ -13,9 +13,12 @@ program:
   * ingest    — a tagged queue ``(session_id, x)`` is routed to
                 fixed-shape per-session chunk buffers with one scatter
                 (stable-sort + searchsorted positions, no host loop),
-                then ``vmap(algo.run_batched)`` over the session axis
-                prices and updates all sessions at once — the fused
-                fast path of DESIGN.md §4, batched once more;
+                then ONE pod step advances all sessions at once: the
+                fused Pallas pod-step kernel (one grid launch per chunk
+                over the session axis, ``kernels/pod_step``) on TPU, or
+                its bit-equal ``vmap(algo.run_batched)`` reference
+                elsewhere — selected by ``podstep_backend`` /
+                ``REPRO_PODSTEP_BACKEND`` (DESIGN.md §11);
   * lifecycle — admit into a free slot, evict, and drift-triggered
                 reset all reuse slots via masked row-selects
                 (``tree_select``), so the compiled program never sees a
@@ -33,10 +36,11 @@ via ``run_batched`` on the items routed to it (tested in
 tests/test_summarizer_pod.py) — the pod is purely an execution strategy.
 
 Per-session hyperparameters (DESIGN.md §9): sieve-family algorithms carry
-(K, T, eps) as traced state (``state.hp``), so
+(K, T, eps) — and, since the fused pod step, the kernel hyperparameters
+(lengthscale, kernel kind) — as traced state (``state.hp``), so
 ``admit(state, sid, spec=SessionSpec(...))`` stamps a tenant's own budget
-into its slot's (S,) hyperparam rows — one compiled program, mixed
-budgets, no retrace.  The default (``spec=None``) is the pod's own
+AND kernel into its slot's (S,) hyperparam rows — one compiled program,
+mixed plans, no retrace.  The default (``spec=None``) is the pod's own
 construction-time spec; ``readout().specs`` surfaces the live rows, and
 checkpoints round-trip them like any other state leaf.
 
@@ -57,6 +61,7 @@ import numpy as np
 from repro.compat import hashable_lru
 from repro.core.sieve_family import SieveAlgorithm, stack_states, tree_select
 from repro.core.spec import HyperParams, SessionSpec
+from repro.kernels.pod_step import pod_step
 
 Array = jax.Array
 
@@ -117,11 +122,18 @@ class SummarizerPod:
     call: an ingest batch may carry at most ``chunk`` items per session
     (the tail is counted as dropped — size the ingest batches so this
     never triggers, exactly like a serving queue's admission bound).
+
+    ``podstep_backend`` selects how the pod advances per chunk
+    (``kernels.pod_step.BACKENDS``): ``None`` defers to the
+    ``REPRO_PODSTEP_BACKEND`` env var (default ``auto`` — the fused
+    Pallas kernel on TPU for fusable algorithms, else the vmapped
+    reference).  All backends are bit-equal in f32.
     """
 
     algo: Any
     sessions: int
     chunk: int
+    podstep_backend: Optional[str] = None
 
     # ------------------------------------------------------------------ state
     def init(self) -> PodState:
@@ -182,17 +194,14 @@ class SummarizerPod:
         f = self.algo.f
         if spec.d is not None and int(spec.d) != f.d:
             raise ValueError(f"spec.d={spec.d} != pod objective d={f.d}")
-        if spec.kernel_kind != f.kernel.kind:
-            raise ValueError(f"spec.kernel_kind={spec.kernel_kind!r} != "
-                             f"pod kernel {f.kernel.kind!r} (the kernel is "
-                             "pod-wide, not per slot)")
-        if (spec.lengthscale is not None
-                and float(spec.lengthscale) != f.kernel.lengthscale):
-            raise ValueError(f"spec.lengthscale={spec.lengthscale} != pod "
-                             f"lengthscale {f.kernel.lengthscale}")
         if float(spec.a) != f.a:
             raise ValueError(f"spec.a={spec.a} != pod a={f.a}")
-        return self.algo.hyper(K=spec.K, T=spec.T, eps=spec.eps)
+        # the kernel hyperparameters are per-slot traced state (hp rows),
+        # not pod-wide constants: tenants with different lengthscales or
+        # kernel kinds share the compiled program
+        return self.algo.hyper(K=spec.K, T=spec.T, eps=spec.eps,
+                               lengthscale=spec.lengthscale,
+                               kernel_kind=spec.kernel_kind)
 
     def _fresh_rows(self, hyper: Optional[HyperParams]):
         """(S,)-stacked freshly-initialized algorithm rows, all carrying
@@ -382,9 +391,10 @@ class SummarizerPod:
                ) -> Tuple[PodState, Dict[str, Array]]:
         """Route one tagged batch and advance every session — the hot path.
 
-        One routing scatter + one vmapped ``run_batched`` over the
-        session axis: a single fused program for the whole pod, whatever
-        mix of sessions the batch addresses.
+        One routing scatter + one pod step over the session axis (the
+        fused Pallas kernel or its vmapped ``run_batched`` reference —
+        see ``podstep_backend``): a single fused program for the whole
+        pod, whatever mix of sessions the batch addresses.
         """
         chunks, counts, unknown, overflow = self.route(state, sids, X)
         return self.ingest_routed(state, chunks, counts, unknown, overflow)
@@ -404,7 +414,8 @@ class SummarizerPod:
         hands each shard its slice of a (P,) global drop vector.
         """
         n_before = self._insertions(state)
-        algo2 = jax.vmap(self.algo.run_batched)(state.algo, chunks, counts)
+        algo2 = pod_step(self.algo, state.algo, chunks, counts,
+                         backend=self.podstep_backend)
         state2 = dataclasses.replace(state, algo=algo2)
         acc = self._insertions(state2) - n_before  # (S,) this batch
         unk = jnp.sum(jnp.asarray(unknown, jnp.int32))

@@ -249,10 +249,18 @@ def test_admission_spec_validated_against_pod_program():
     st_ = pod.init()
     with pytest.raises(ValueError, match="does not match this pod"):
         pod.admit(st_, jnp.int32(1), spec=SessionSpec(algo="salsa", K=4))
-    with pytest.raises(ValueError, match="kernel"):
-        pod.admit(st_, jnp.int32(1),
-                  spec=SessionSpec(algo="threesieves", K=4,
-                                   kernel_kind="linear_norm"))
+    # kernel hyperparameters are per-slot traced state since the fused
+    # pod step: a tenant with its own kind/lengthscale is ADMITTED, not
+    # rejected — the row is stamped into the slot's hp leaves
+    st_k, slot_k, ok_k = pod.admit(
+        st_, jnp.int32(3),
+        spec=SessionSpec(algo="threesieves", K=4,
+                         kernel_kind="linear_norm", lengthscale=0.25))
+    assert bool(ok_k)
+    specs_k = pod.readout(st_k).specs
+    assert int(specs_k.kernel_kind[int(slot_k)]) == 1
+    np.testing.assert_allclose(
+        float(specs_k.lengthscale[int(slot_k)]), 0.25)
     with pytest.raises(ValueError, match="spec.d"):
         pod.admit(st_, jnp.int32(1),
                   spec=SessionSpec(algo="threesieves", K=4, d=9))
