@@ -3,8 +3,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify lint bench-oracle bench-serve bench-ingest bench-autoscale \
-	bench-podstep bench-gate bench
+.PHONY: verify lint analyze bench-oracle bench-serve bench-ingest \
+	bench-autoscale bench-podstep bench-gate bench
 
 # tier-1: the gate every PR must keep green.  JUNIT=<path> additionally
 # writes a junit XML report (CI uploads it as an artifact).
@@ -12,9 +12,17 @@ JUNIT ?=
 verify:
 	python -m pytest -x -q $(if $(JUNIT),--junitxml=$(JUNIT))
 
-# static checks (config in ruff.toml); CI runs this as a separate job
+# static checks: ruff (config in ruff.toml) + the repo-native podlint
+# pass (config in podlint.toml); CI runs this as a separate job
 lint:
-	ruff check src tests benchmarks
+	ruff check src tests benchmarks tools
+	python -m tools.podlint src tests benchmarks
+
+# the full analysis gate: podlint + retrace_guard self-tests, then the
+# tree scan with a report file (CI uploads podlint-report.txt)
+analyze:
+	python -m pytest -q tests/test_podlint.py tests/test_retrace_guard.py
+	python -m tools.podlint src tests benchmarks --report podlint-report.txt
 
 # GainOracle backend A/B sweep -> BENCH_oracle.json
 bench-oracle:

@@ -105,7 +105,7 @@ def _fmt(v) -> str:
 
 def print_table(name: str, rows: List[dict]) -> None:
     print(f"\n{name}")
-    w = max([len(r["metric"]) for r in rows] + [6])
+    w = max([*(len(r["metric"]) for r in rows), 6])
     print(f"  {'metric':<{w}}  {'baseline':>12}  {'fresh':>12}  "
           f"{'speed':>7}  status")
     for r in rows:

@@ -108,8 +108,8 @@ def oracle_backend_sweep(out: List[str], *, json_path=None,
     recorded.
     """
     rows: List[Dict] = []
-    timed = ["jnp"] + (["pallas"] if resolve_backend("auto") == "pallas"
-                       else [])
+    timed = ["jnp", *(["pallas"] if resolve_backend("auto") == "pallas"
+                      else [])]
     out.append(f"oracle backend sweep (timed: {', '.join(timed)}; "
                f"interpret checked at B=32)")
     for kind in kinds:

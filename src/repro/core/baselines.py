@@ -100,7 +100,12 @@ class IndependentSetImprovement:
     f: LogDet
 
     def init(self) -> ISIState:
-        return ISIState(ld=self.f.init(), w=jnp.full((self.f.K,), jnp.inf))
+        # w follows f.dtype (inf is representable in bf16): an implicit
+        # float32 here upcast every bf16 gain at insertion, so the
+        # replacement comparisons ran in a dtype the objective never
+        # produced (and float64 under x64)
+        return ISIState(ld=self.f.init(),
+                        w=jnp.full((self.f.K,), jnp.inf, self.f.dtype))
 
     def step(self, state: ISIState, x: Array) -> ISIState:
         f = self.f

@@ -262,7 +262,7 @@ class Model:
             x, _ = jax.lax.scan(f, x, params["encoder"]["blocks"])
         else:
             for i in range(cfg.encoder.n_layers):
-                bp = jax.tree_util.tree_map(lambda l: l[i],
+                bp = jax.tree_util.tree_map(lambda l, i=i: l[i],
                                             params["encoder"]["blocks"])
                 x, _ = f(x, bp)
         return apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
@@ -316,7 +316,8 @@ class Model:
         else:
             aux = aux0
             for i in range(cfg.n_blocks):
-                bp = jax.tree_util.tree_map(lambda l: l[i], params["blocks"])
+                bp = jax.tree_util.tree_map(lambda l, i=i: l[i],
+                                            params["blocks"])
                 (x, aux), _ = f((x, aux), bp)
         logits = self._head(params, x)
         if cfg.n_prefix:
@@ -348,7 +349,7 @@ class Model:
             return jax.lax.scan(body, x, xs)
         outs = []
         for i in range(self.cfg.n_blocks):
-            xi = jax.tree_util.tree_map(lambda l: l[i], xs)
+            xi = jax.tree_util.tree_map(lambda l, i=i: l[i], xs)
             x, out = body(x, xi)
             outs.append(out)
         stacked = jax.tree_util.tree_map(

@@ -98,5 +98,5 @@ class ServeDriver:
 
 def _pad_rows(x: Array, pad: int) -> Array:
     """Zero-pad the leading (batch) axis by ``pad`` rows."""
-    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    widths = [(0, pad), *[(0, 0)] * (x.ndim - 1)]
     return jnp.pad(x, widths)

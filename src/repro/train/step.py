@@ -84,10 +84,12 @@ def make_grad_fn(model: Model, cfg: TrainStepConfig):
 
 
 def make_train_step(model: Model, opt_cfg: AdamWConfig,
-                    step_cfg: TrainStepConfig = TrainStepConfig(),
+                    step_cfg: TrainStepConfig | None = None,
                     compressor=None):
     """compressor: optional repro.train.compress.Compressor applied to grads
     (error-feedback state threaded through the step)."""
+    if step_cfg is None:  # B008: no call in the argument default
+        step_cfg = TrainStepConfig()
     grad_fn = make_grad_fn(model, step_cfg)
 
     if compressor is None:

@@ -110,6 +110,42 @@ def test_random_reservoir_uniformity():
     assert hits[:50].mean() == pytest.approx(hits[150:].mean(), rel=0.6)
 
 
+def test_isi_weight_carry_follows_objective_dtype():
+    """Regression (PL001, the PR 2 carry-dtype class): ISI's insertion-
+    time weight vector was ``jnp.full((K,), jnp.inf)`` — implicitly
+    float32 (float64 under x64), so a bf16 objective's gains were
+    silently upcast at every ``w.at[slot].set(g)`` and the replacement
+    comparisons ran in a dtype the objective never produced.  ``w``
+    must follow ``f.dtype`` (inf is representable in bf16), and the
+    insertion-time set must now be exact instead of widening.
+
+    The full bf16 ISI *run* cannot execute on CPU — its replacement
+    branch traces ``jnp.linalg.cholesky`` (``LogDet.refactor``), which
+    has no bf16 LAPACK kernel — so this pins the carry dtype and the
+    widening-free insert, plus f32 end-to-end non-regression."""
+    from repro.core import KernelConfig, LogDet
+    from repro.core.baselines import ISIState, IndependentSetImprovement
+
+    f = LogDet(K=6, d=D, kernel=KernelConfig("rbf", LS),
+               dtype=jnp.bfloat16)
+    algo = IndependentSetImprovement(f=f)
+    state = algo.init()
+    assert state.w.dtype == jnp.bfloat16
+    # insertion-time write: bf16 gain lands in a bf16 slot, not an f32 one
+    g = jnp.asarray(0.625, jnp.bfloat16)  # exact in bf16
+    w2 = state.w.at[0].set(g)
+    assert w2.dtype == jnp.bfloat16
+    assert ISIState(ld=state.ld, w=w2).w[0] == g
+    # the default objective stays float32, end to end — the fix must
+    # not narrow the existing pinned behaviour
+    f32 = make("independentsetimprovement", K=6, d=D, lengthscale=LS)
+    assert f32.init().w.dtype == jnp.float32
+    out = jax.jit(f32.run)(f32.init(), _data(seed=3, n=120))
+    assert out.w.dtype == jnp.float32
+    _, n, fv = f32.summary(out)
+    assert int(n) == 6 and np.isfinite(np.asarray(fv))
+
+
 def test_greedy_is_best(data, greedy_val):
     """Greedy should (weakly) dominate every streaming algorithm here."""
     for name in ["sievestreaming", "random"]:

@@ -251,6 +251,36 @@ def test_handoff_mid_drift_reset():
                                       "mid-drift-reset")
 
 
+def test_second_handoff_same_victim_count_is_retrace_free(retrace_guard):
+    """A warmed-up migration path must stay compiled: the snapshot /
+    restore programs key on the victim *count* (the per-leaf gather is
+    ``leaf[slots]`` with ``len(moving)`` rows), so a second handoff
+    moving the same number of sessions — different sids, different
+    slots, opposite direction — is served entirely from cache.  At
+    fleet scale the quiesce window must not pay XLA compile latency."""
+    podA, podB = _pod(S=4), _pod(S=4)
+    router, pipes = _fleet([podA, podB])
+    states = {0: _admit_all(podA, podA.init(), [60, 61, 62]), 1: podB.init()}
+    router.assign([60, 61, 62], 0)
+    asc = PodAutoscaler(router=router, pods={0: podA, 1: podB})
+    rng = np.random.RandomState(13)
+    sids, X = _tagged(rng, 24, [60, 61, 62])
+    ing = jax.jit(podA.ingest)
+    states[0], _ = ing(states[0], jnp.asarray(sids), jnp.asarray(X))
+
+    states, rep = asc.handoff(states, 0, 1, [60])  # warmup compile
+    assert rep.ok and rep.moved == [60]
+    # same victim count, fresh sid, the reverse direction — zero compiles
+    with retrace_guard.budget(0):
+        states, rep2 = asc.handoff(states, 0, 1, [61])
+        states, rep3 = asc.handoff(states, 1, 0, [60])
+    assert retrace_guard.compiles == 0
+    assert rep2.ok and rep2.moved == [61]
+    assert rep3.ok and rep3.moved == [60]
+    assert sorted(podA.routing_table(states[0])) == [60, 62]
+    assert sorted(podB.routing_table(states[1])) == [61]
+
+
 # ---------------------------------------------------------------- refusals
 def test_handoff_unknown_or_evicted_sid_is_counted_noop():
     podA, podB = _pod(S=3), _pod(S=3)

@@ -21,7 +21,7 @@ ALIAS_ALGOS = ["random", "independentsetimprovement", "preemptionstreaming",
                "quickstream"]
 # the ragged-chunk (n_valid) contract: the sieve family plus the ring-buffer
 # baseline that can tenant a mixed-algorithm SummarizerPod
-N_VALID_ALGOS = BATCHED_ALGOS + ["quickstream"]
+N_VALID_ALGOS = [*BATCHED_ALGOS, "quickstream"]
 
 
 def _data(seed=0, n=300):

@@ -434,6 +434,27 @@ def test_pod_serve_drift_loop():
     assert int(jnp.sum(st.items)) == 12 * 32
 
 
+def test_pipeline_resume_is_retrace_free(retrace_guard):
+    """Resuming a budgeted pipeline must not recompile anything: run()
+    pads every device batch to the fixed (batch, d) shape, so the
+    resumed drain — including the ragged tail — is served entirely from
+    the warmup compile (the double-buffered advance, donation included)."""
+    pod = _pod(S=2, C=16)
+    rng = np.random.RandomState(12)
+    sids, X = _tagged(rng, 90, [1, 2])  # ragged tail: 90 = 32 + 32 + 26
+    st = _admit_all(pod, pod.init(), [1, 2])
+    pipe = IngestPipeline(pod, source=ReplaySource(sids=sids, X=X, batch=32),
+                          batch=32)
+    st, s1 = pipe.run(st, max_batches=1)  # warmup: compiles the step
+    assert s1["batches"] == 1
+    with retrace_guard.budget(0):
+        st, s2 = pipe.run(st)  # resume to exhaustion
+    assert retrace_guard.compiles == 0
+    assert pipe.exhausted and s1["items"] + s2["items"] == 90
+    assert s2["padded"] == 6
+    _assert_sessions_match_standalone(pod, st, _per_session(sids, X))
+
+
 def test_pipeline_surfaces_producer_failure():
     """A producer that dies mid-stream must raise from run(), not pose
     as a clean end-of-stream with fewer items."""

@@ -1,0 +1,186 @@
+"""podlint self-tests: every rule fires on its known-bad fixture and
+stays silent on the repaired form (including the historical PR 5 lock
+pattern and a PR 2-style bf16 carry), the suppression / config /
+exit-code contracts hold, and the repo tree itself scans clean.
+
+Pure AST work — no jax import, no device."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))  # tools/ is not on the src PYTHONPATH
+
+from tools.podlint import REGISTRY, lint_paths, lint_source
+from tools.podlint.cli import main as podlint_main
+from tools.podlint.config import Config, ConfigError, load_config
+
+TESTDATA = REPO / "tools" / "podlint" / "testdata"
+ALL_CODES = ("PL001", "PL002", "PL003", "PL004", "PL005")
+
+
+def _cfg(**kw):
+    kw.setdefault("exclude", [])
+    kw.setdefault("traced_functions", [])
+    kw.setdefault("rules", {})
+    return Config(**kw)
+
+
+def _lint_file(path, select=None, cfg=None):
+    source = pathlib.Path(path).read_text()
+    rel = str(pathlib.Path(path).relative_to(REPO))
+    return lint_source(source, rel, cfg or _cfg(),
+                       select=set(select) if select else None)
+
+
+# ------------------------------------------------------------ rule catalog
+def test_registry_has_the_five_rules():
+    assert set(REGISTRY) == set(ALL_CODES)
+    for code, cls in REGISTRY.items():
+        assert cls.code == code and cls.summary
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_rule_fires_on_bad_fixture_and_not_on_repaired(code):
+    n = code[-1]
+    bad, _ = _lint_file(TESTDATA / f"pl00{n}_bad.py", select=[code])
+    good, _ = _lint_file(TESTDATA / f"pl00{n}_good.py", select=[code])
+    assert bad, f"{code} must fire on its known-bad fixture"
+    assert all(f.code == code for f in bad)
+    assert all(f.line > 0 and f.col > 0 for f in bad)
+    assert not good, f"{code} fired on the repaired form: {good}"
+
+
+def test_pl002_catches_the_pr5_router_lock_pattern():
+    """The historical deadlock: a blocking buffer.put under the router
+    lock (fixed in ingest.PodRouter.put by moving the enqueue out)."""
+    findings, _ = _lint_file(TESTDATA / "pl002_bad.py", select=["PL002"])
+    put_hits = [f for f in findings if "put(...)" in f.message]
+    assert put_hits, "the blocking put under self._lock must be flagged"
+    assert "self._lock" in put_hits[0].message
+
+
+def test_pl001_catches_the_pr2_bf16_carry_shape():
+    """An implicit-f32 scan carry next to a traced gains call — the
+    PR 2 bug class (ThreeSieves.run_batched's carry crashed on bf16)."""
+    findings, _ = _lint_file(TESTDATA / "pl001_bad.py", select=["PL001"])
+    assert any("zeros" in f.message for f in findings)  # the carry
+    assert any("full" in f.message for f in findings)  # the weights
+
+
+def test_pl003_flags_direct_and_named_donation():
+    findings, _ = _lint_file(TESTDATA / "pl003_bad.py", select=["PL003"])
+    assert len(findings) == 2
+    assert {"advance" in f.message or "jit" in f.message
+            for f in findings} == {True}
+
+
+# ------------------------------------------------------------- suppressions
+def test_ignore_comment_suppresses_only_named_rule():
+    src = ("import jax.numpy as jnp\n"
+           "a = jnp.zeros((3,))  # podlint: ignore[PL001] -- test buffer\n"
+           "b = jnp.zeros((3,))  # podlint: ignore[PL002] -- wrong code\n"
+           "c = jnp.zeros((3,))\n")
+    findings, suppressed = lint_source(src, "x.py", _cfg())
+    assert [f.line for f in findings] == [3, 4]
+    assert suppressed == 1
+
+
+def test_bare_ignore_suppresses_all_rules_on_the_line():
+    src = ("import jax.numpy as jnp\n"
+           "a = jnp.zeros((3,))  # podlint: ignore\n")
+    findings, suppressed = lint_source(src, "x.py", _cfg())
+    assert not findings and suppressed == 1
+
+
+def test_skip_file_pragma_exempts_the_whole_module():
+    src = ("# podlint: skip-file -- generated\n"
+           "import jax.numpy as jnp\n"
+           "a = jnp.zeros((3,))\n")
+    findings, suppressed = lint_source(src, "x.py", _cfg())
+    assert not findings and suppressed == 0
+
+
+def test_parse_error_is_a_finding_not_a_crash():
+    findings, _ = lint_source("def broken(:\n", "x.py", _cfg())
+    assert [f.code for f in findings] == ["PL000"]
+
+
+# ------------------------------------------------------------------- config
+def test_rule_include_scopes_rule_to_matching_paths():
+    cfg = _cfg(rules={"PL001": {"include": ["src/**"]}})
+    src = "import jax.numpy as jnp\na = jnp.zeros((3,))\n"
+    hit, _ = lint_source(src, "src/repro/x.py", cfg, select={"PL001"})
+    miss, _ = lint_source(src, "tests/test_x.py", cfg, select={"PL001"})
+    assert hit and not miss
+
+
+def test_unknown_rule_code_in_config_is_a_config_error(tmp_path):
+    bad = tmp_path / "podlint.toml"
+    bad.write_text("[rule.PL999]\n")
+    with pytest.raises(ConfigError, match="PL999"):
+        load_config(str(bad), REGISTRY.keys())
+
+
+def test_traced_functions_glob_seeds_pl004(tmp_path):
+    src = ("import numpy as np\n"
+           "import jax.numpy as jnp\n"
+           "class A:\n"
+           "    def ingest_routed(self, state):\n"
+           "        return np.asarray(state)\n")
+    quiet, _ = lint_source(src, "x.py", _cfg(), select={"PL004"})
+    cfg = _cfg(traced_functions=["ingest_routed"])
+    loud, _ = lint_source(src, "x.py", cfg, select={"PL004"})
+    assert not quiet and len(loud) == 1
+
+
+# ---------------------------------------------------------- exit-code / CLI
+def test_exit_codes_clean_findings_error(tmp_path, capsys):
+    clean = tmp_path / "clean.py"
+    clean.write_text("import jax.numpy as jnp\n"
+                     "a = jnp.zeros((3,), jnp.float32)\n")
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import jax.numpy as jnp\na = jnp.zeros((3,))\n")
+    assert podlint_main([clean.name, "--root", str(tmp_path)]) == 0
+    assert podlint_main([dirty.name, "--root", str(tmp_path)]) == 1
+    assert podlint_main(["no/such/dir", "--root", str(tmp_path)]) == 2
+    assert podlint_main([clean.name, "--root", str(tmp_path),
+                         "--select", "PL999"]) == 2
+    capsys.readouterr()
+
+
+def test_report_file_mirrors_stdout(tmp_path, capsys):
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import jax.numpy as jnp\na = jnp.zeros((3,))\n")
+    report = tmp_path / "report.txt"
+    rc = podlint_main([dirty.name, "--root", str(tmp_path),
+                       "--report", str(report)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert report.read_text().strip() == out.strip()
+    assert "PL001" in out and "dirty.py:2:" in out
+
+
+def test_module_entrypoint_runs():
+    """`python -m tools.podlint` is what Make/CI invoke — keep it alive."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.podlint", "--list-rules"],
+        cwd=REPO, capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0
+    for code in ALL_CODES:
+        assert code in proc.stdout
+
+
+# ----------------------------------------------------------- the tree scan
+def test_repo_tree_scans_clean():
+    """The `make analyze` gate, as a test: src+tests+benchmarks carry no
+    unsuppressed findings under the repo's podlint.toml."""
+    result = lint_paths(["src", "tests", "benchmarks"],
+                        config_path=str(REPO / "podlint.toml"),
+                        root=str(REPO))
+    assert not result.errors
+    assert result.files > 50
+    assert not result.findings, "\n".join(
+        f.render() for f in result.findings)

@@ -1,0 +1,58 @@
+"""The retrace_guard fixture's own contract (conftest.py): a compile
+budget that FAILS when something retraces inside the guarded scope and
+stays silent when the compile cache serves everything.  The serve /
+ingest / autoscale suites lean on this — prove the teeth here."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@jax.jit
+def _double(x):
+    return x * 2.0
+
+
+def test_guard_passes_on_cache_hits(retrace_guard):
+    x = jnp.ones((8,), jnp.float32)
+    _double(x)  # warmup compile, outside the guard
+    with retrace_guard.budget(0):
+        for _ in range(3):
+            _double(x)
+    assert retrace_guard.compiles == 0
+
+
+def test_guard_fails_on_an_intentional_retrace(retrace_guard):
+    """The negative proof: a new input shape forces a fresh compile
+    inside a zero budget, and the guard must raise."""
+    _double(jnp.ones((8,), jnp.float32))
+    with pytest.raises(AssertionError, match="fresh XLA compile"):
+        with retrace_guard.budget(0):
+            _double(jnp.ones((9,), jnp.float32))  # new shape: retrace
+
+
+def test_guard_budget_allows_expected_compiles(retrace_guard):
+    _double(jnp.ones((8,), jnp.float32))
+    # materialise the new-shape input OUTSIDE the guard: jnp.ones compiles
+    # its own fill program per shape, which would otherwise eat the budget
+    x10 = jnp.ones((10,), jnp.float32)
+    with retrace_guard.budget(1):
+        _double(x10)  # the one budgeted compile
+    assert retrace_guard.compiles == 1
+
+
+def test_guard_propagates_body_exceptions_not_budget(retrace_guard):
+    """An exception in the guarded body must surface as itself, not be
+    shadowed by the budget assertion."""
+    with pytest.raises(ValueError, match="boom"):
+        with retrace_guard.budget(0):
+            _double(jnp.ones((11,), jnp.float32))  # over budget AND raising
+            raise ValueError("boom")
+
+
+def test_guard_is_scoped_counting_stops_outside(retrace_guard):
+    x8 = jnp.ones((8,), jnp.float32)
+    _double(x8)
+    with retrace_guard.budget(0):
+        _double(x8)
+    _double(jnp.ones((12,), jnp.float32))  # outside: not counted
+    assert retrace_guard.compiles == 0

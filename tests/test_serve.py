@@ -96,3 +96,48 @@ def test_driver_partial_batch(arch):
 
     with pytest.raises(ValueError, match="exceeds the compiled slot count"):
         driver.generate(params, jnp.zeros((5, 8), jnp.int32), n_new=2)
+
+
+# ----------------------------------------------------- retrace discipline
+def test_pod_admit_evict_drift_reset_cycle_is_retrace_free(retrace_guard):
+    """The serving-stack invariant behind DESIGN.md §9, now guarded by
+    the reusable fixture instead of one bespoke counter: after a warmup
+    cycle, a full admit -> ingest -> drift-reset -> evict lifecycle is
+    served entirely from the compile cache — session ids, slot masks and
+    hyperparameters are *arguments*, never trace-time constants."""
+    from repro.core.api import make
+    from repro.serve import SummarizerPod
+
+    d = 5
+    algo = make("threesieves", K=4, d=d, lengthscale=1.5, eps=0.1, T=11)
+    pod = SummarizerPod(algo=algo, sessions=4, chunk=8)
+    jadmit = jax.jit(pod.admit)
+    jevict = jax.jit(pod.evict)
+    jreset = jax.jit(pod.reset_slots)
+    jingest = jax.jit(pod.ingest)
+
+    rng = np.random.RandomState(17)
+
+    def cycle(state, sids, mask_slot):
+        for sid in sids:
+            state, _, ok = jadmit(state, sid)
+            assert bool(ok)
+        state, _ = jingest(state, batch_sids, batch_X)
+        mask = np.zeros(4, bool)
+        mask[mask_slot] = True
+        state = jreset(state, jnp.asarray(mask))
+        return jevict(state, sids[0])
+
+    # all device inputs materialised up front: identical shapes/dtypes
+    # both cycles, and no jnp fill programs compiling inside the guard
+    warm_sids = [jnp.int32(1), jnp.int32(2)]
+    next_sids = [jnp.int32(3), jnp.int32(4)]
+    batch_sids = jnp.asarray(
+        rng.choice(np.asarray([1, 2, 3, 4], np.int32), 16).astype(np.int32))
+    batch_X = jnp.asarray(rng.randn(16, d).astype(np.float32))
+
+    state = cycle(pod.init(), warm_sids, mask_slot=0)  # warmup compiles
+    with retrace_guard.budget(0):
+        state = cycle(state, next_sids, mask_slot=1)
+    assert retrace_guard.compiles == 0
+    assert sorted(pod.routing_table(state)) == [2, 4]

@@ -348,7 +348,7 @@ def test_ckpt_roundtrips_per_slot_hyperparams():
                          jnp.asarray(X))
     ro = podB.readout(merged)
     hyper = algo.hyper(K=3, T=7, eps=0.3)
-    Xs = jnp.asarray(np.concatenate([np.stack(per[5])] + extra))
+    Xs = jnp.asarray(np.concatenate([np.stack(per[5]), *extra]))
     ref = jax.jit(algo.run_batched)(algo.init(hyper), Xs)
     rf, rn, rfv = algo.summary(ref)
     assert int(ro.n[slot]) == int(rn) <= 3

@@ -30,7 +30,7 @@ def threesieves_numpy(X, K, T, eps, ls, a=1.0):
     f_S = 0.0
     for i in range(len(X)):
         if len(S) < K:
-            gain = fval(S + [i]) - f_S
+            gain = fval([*S, i]) - f_S
             v = (1.0 + eps) ** (lad.ihi - min(j, nr - 1))
             thr = (v / 2.0 - f_S) / (K - len(S))
             if gain >= thr:

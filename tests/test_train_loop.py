@@ -34,7 +34,7 @@ def test_loss_decreases(setup):
     opt = init_opt_state(params, opt_cfg)
     first = last = None
     p = params
-    for i in range(10):
+    for _ in range(10):
         p, opt, m = step(p, opt, batch_fn(0))  # same batch -> must overfit
         if first is None:
             first = float(m["loss"])

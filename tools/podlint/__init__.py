@@ -1,0 +1,11 @@
+"""podlint — repo-native static analysis for the JAX/Pallas invariants
+this codebase keeps re-fixing by hand (dtype drift, lock discipline,
+use-after-donate, host syncs in hot paths, tracer branches).
+
+Usage:  python -m tools.podlint src tests benchmarks
+See tools/podlint/README.md for the rule catalog and how to add a rule.
+"""
+from .engine import Finding, lint_paths, lint_source  # noqa: F401
+from .rules import REGISTRY  # noqa: F401
+
+__version__ = "0.1.0"

@@ -1,0 +1,218 @@
+"""Shared per-module AST analysis the rules consume.
+
+One :class:`ModuleModel` is built per file and handed to every rule, so
+the (comparatively) expensive work — import-alias resolution, the
+traced-function fixpoint, lock-region discovery — happens once.
+
+"Traced" here means *the body runs under a JAX trace*: the function is
+(a) decorated with ``jax.jit``/``vmap``/... , (b) passed by name into a
+trace entry point (``jax.jit(f)``, ``jax.lax.scan(body, ...)``,
+``pl.pallas_call(kernel, ...)``), (c) matched by the config's
+``traced_functions`` globs (for protocol methods like ``step`` /
+``run_batched`` whose call sites live in other modules), (d) defined
+inside a traced function, or (e) called (by bare name or ``self.``
+method) from a traced function in the same module.  (e) is a
+name-based intra-module closure — deliberately simple; cross-module
+reachability is what the config globs are for.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+# entry points whose function-valued arguments become traced code
+TRACE_ENTRY = {
+    "jit", "pjit", "vmap", "pmap", "grad", "value_and_grad",
+    "checkpoint", "remat", "custom_jvp", "custom_vjp",
+    "scan", "cond", "while_loop", "fori_loop", "switch", "map",
+    "shard_map", "pallas_call", "associative_scan",
+}
+# decorators that make the decorated function traced
+TRACE_DECOS = {"jit", "pjit", "vmap", "pmap", "checkpoint", "remat",
+               "custom_jvp", "custom_vjp"}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.lax.scan`` / ``self._lock`` / ``jnp`` -> the dotted string,
+    or None for anything that is not a plain name/attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    name: str
+    qualname: str
+    parent_class: Optional[str]
+    parent_function: Optional["FunctionInfo"]
+    traced: bool = False
+    traced_via: str = ""
+
+    def mark(self, via: str) -> bool:
+        if self.traced:
+            return False
+        self.traced, self.traced_via = True, via
+        return True
+
+
+class ModuleModel:
+    """Everything the rules need to know about one parsed module."""
+
+    def __init__(self, path: str, tree: ast.Module, source: str,
+                 traced_globs: Tuple[str, ...] = ()):
+        self.path = path
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.jnp_aliases: Set[str] = set()
+        self.np_aliases: Set[str] = set()
+        self.jax_aliases: Set[str] = set()
+        self.functions: Dict[int, FunctionInfo] = {}  # id(node) -> info
+        self._by_name: Dict[str, List[FunctionInfo]] = {}
+        self._collect_imports()
+        self._collect_functions()
+        self._seed_traced(traced_globs)
+        self._propagate_traced()
+
+    # ------------------------------------------------------------ imports
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    alias = a.asname or a.name.split(".")[0]
+                    if a.name == "jax.numpy":
+                        self.jnp_aliases.add(a.asname or "jax.numpy")
+                    elif a.name == "numpy":
+                        self.np_aliases.add(alias)
+                    elif a.name == "jax" or a.name.startswith("jax."):
+                        self.jax_aliases.add(alias)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "jax":
+                    for a in node.names:
+                        if a.name == "numpy":
+                            self.jnp_aliases.add(a.asname or "numpy")
+
+    # ---------------------------------------------------------- functions
+    def _collect_functions(self) -> None:
+        def visit(node: ast.AST, cls: Optional[str],
+                  fn: Optional[FunctionInfo], prefix: str) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{prefix}{child.name}"
+                    info = FunctionInfo(child, child.name, qual, cls, fn)
+                    self.functions[id(child)] = info
+                    self._by_name.setdefault(child.name, []).append(info)
+                    visit(child, cls, info, qual + ".")
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, child.name, fn, f"{prefix}{child.name}.")
+                else:
+                    visit(child, cls, fn, prefix)
+
+        visit(self.tree, None, None, "")
+
+    def enclosing(self, parents: List[ast.AST]) -> Optional[FunctionInfo]:
+        """Innermost FunctionInfo in a parent chain (outermost first)."""
+        for node in reversed(parents):
+            info = self.functions.get(id(node))
+            if info is not None:
+                return info
+        return None
+
+    # ------------------------------------------------------ traced marking
+    def _seed_traced(self, traced_globs: Tuple[str, ...]) -> None:
+        for info in self.functions.values():
+            for deco in getattr(info.node, "decorator_list", []):
+                target = deco.func if isinstance(deco, ast.Call) else deco
+                name = dotted_name(target)
+                if name and name.split(".")[-1] in TRACE_DECOS:
+                    info.mark(f"@{name}")
+                # functools.partial(jax.jit, ...) as a decorator
+                if (isinstance(deco, ast.Call) and name
+                        and name.split(".")[-1] == "partial" and deco.args):
+                    inner = dotted_name(deco.args[0])
+                    if inner and inner.split(".")[-1] in TRACE_DECOS:
+                        info.mark(f"@partial({inner}, ...)")
+            for pat in traced_globs:
+                if (fnmatch.fnmatch(info.name, pat)
+                        or fnmatch.fnmatch(info.qualname, pat)):
+                    info.mark(f"config glob {pat!r}")
+        # functions passed by name into trace entry points
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            if not callee or callee.split(".")[-1] not in TRACE_ENTRY:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                ref = dotted_name(arg)
+                if not ref:
+                    continue
+                ref = ref.split(".")[-1]  # self.step -> step
+                for info in self._by_name.get(ref, []):
+                    info.mark(f"passed to {callee}")
+
+    def _propagate_traced(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for info in self.functions.values():
+                if not info.traced:
+                    # defined inside a traced function -> traced
+                    p = info.parent_function
+                    if p is not None and p.traced:
+                        changed |= info.mark(f"nested in {p.qualname}")
+                    continue
+                # called from a traced function -> traced
+                for child in ast.walk(info.node):
+                    if not isinstance(child, ast.Call):
+                        continue
+                    callee = dotted_name(child.func)
+                    if not callee:
+                        continue
+                    parts = callee.split(".")
+                    if len(parts) == 1:
+                        cands = self._by_name.get(parts[0], [])
+                    elif len(parts) == 2 and parts[0] in ("self", "cls"):
+                        cands = [c for c in self._by_name.get(parts[1], [])
+                                 if c.parent_class == info.parent_class]
+                    else:
+                        continue
+                    for c in cands:
+                        changed |= c.mark(f"called from {info.qualname}")
+
+    # ------------------------------------------------------------- helpers
+    def traced_functions(self) -> Iterator[FunctionInfo]:
+        return (i for i in self.functions.values() if i.traced)
+
+    def walk_with_parents(self) -> Iterator[Tuple[ast.AST, List[ast.AST]]]:
+        """(node, [ancestors outermost..innermost]) over the whole tree."""
+        stack: List[Tuple[ast.AST, List[ast.AST]]] = [(self.tree, [])]
+        while stack:
+            node, parents = stack.pop()
+            yield node, parents
+            for child in ast.iter_child_nodes(node):
+                stack.append((child, [*parents, node]))
+
+    def lock_regions(self, lock_glob: str = "*lock*"
+                     ) -> Iterator[Tuple[ast.With, ast.AST]]:
+        """``(with_node, lock_expr)`` for every ``with <...lock...>:``."""
+        for node in ast.walk(self.tree):
+            if not isinstance(node, (ast.With, ast.AsyncWith)):
+                continue
+            for item in node.items:
+                expr = item.context_expr
+                # both `with self._lock:` and `with lock.acquire():` forms
+                target = expr.func if isinstance(expr, ast.Call) else expr
+                name = dotted_name(target)
+                if name and fnmatch.fnmatch(
+                        name.split(".")[-1].lower(), lock_glob):
+                    yield node, expr
+                    break

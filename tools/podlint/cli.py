@@ -1,0 +1,68 @@
+"""CLI.  Exit-code contract (enforced by Make/CI):
+
+  0  clean tree (possibly with suppressed findings)
+  1  findings
+  2  usage or config error (bad path, bad toml, unknown rule code)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from .engine import lint_paths
+from .reporter import emit
+from .rules import REGISTRY
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="podlint",
+        description="repo-native JAX/Pallas invariant lints "
+                    "(see tools/podlint/README.md)")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to lint (default: src)")
+    p.add_argument("--config", default=None,
+                   help="podlint.toml path (default: ./podlint.toml "
+                        "when present)")
+    p.add_argument("--root", default=".",
+                   help="paths and config globs are resolved against "
+                        "this directory")
+    p.add_argument("--select", default="",
+                   help="comma-separated rule codes to run (default: all)")
+    p.add_argument("--ignore", default="",
+                   help="comma-separated rule codes to skip")
+    p.add_argument("--report", default=None, metavar="FILE",
+                   help="also write the findings + summary to FILE "
+                        "(the CI artifact)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _parser().parse_args(argv)
+    if args.list_rules:
+        for code, cls in sorted(REGISTRY.items()):
+            print(f"{code}  {cls.summary}")
+        return 0
+    config = args.config
+    if config is None:
+        default = os.path.join(args.root, "podlint.toml")
+        config = default if os.path.exists(default) else None
+    split = lambda s: [c.strip() for c in s.split(",") if c.strip()]
+    result = lint_paths(
+        args.paths, config_path=config, root=args.root,
+        select=split(args.select), ignore=split(args.ignore))
+    if result.errors:
+        for e in result.errors:
+            print(f"podlint: error: {e}", file=sys.stderr)
+        return 2
+    print(emit(result, report_path=args.report,
+               command=" ".join(args.paths)))
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

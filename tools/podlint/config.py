@@ -1,0 +1,144 @@
+"""podlint.toml loading.
+
+Layout::
+
+    [podlint]
+    exclude = ["**/__pycache__/**"]          # path globs, posix-style
+    traced_functions = ["step", "run*"]      # extra traced-context seeds
+
+    [rule.PL001]
+    include = ["src/**"]                     # rule only runs on these
+    ops = ["zeros", "ones", "full", "empty"] # rule-specific knobs
+
+Unknown rule codes and unknown keys are config errors (exit 2) — a
+typoed table must not silently disable a rule.  TOML is parsed with
+stdlib ``tomllib`` (3.11+) or ``tomli``; a minimal built-in parser
+covers the config subset above when neither is importable, so the
+linter runs on a bare interpreter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from pathlib import PurePosixPath
+from typing import Dict, List, Optional
+
+
+class ConfigError(Exception):
+    pass
+
+
+def _load_toml(text: str) -> dict:
+    try:
+        import tomllib  # Python 3.11+
+        return tomllib.loads(text)
+    except ModuleNotFoundError:
+        pass
+    try:
+        import tomli
+        return tomli.loads(text)
+    except ModuleNotFoundError:
+        pass
+    return _parse_minimal_toml(text)
+
+
+def _parse_minimal_toml(text: str) -> dict:
+    """Tables, strings, string/number lists, ints, floats, bools — the
+    subset podlint.toml actually uses.  Not a general TOML parser."""
+    root: dict = {}
+    table = root
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            table = root
+            for part in line[1:-1].strip().split("."):
+                table = table.setdefault(part.strip().strip('"'), {})
+            continue
+        key, sep, value = line.partition("=")
+        if not sep:
+            raise ConfigError(f"podlint.toml:{lineno}: expected key = value")
+        table[key.strip().strip('"')] = _parse_value(value.strip(), lineno)
+    return root
+
+
+def _parse_value(v: str, lineno: int):
+    v = v.split("#")[0].strip() if not v.startswith('"') else v
+    if v.startswith("[") and v.endswith("]"):
+        inner = v[1:-1].strip()
+        if not inner:
+            return []
+        return [_parse_value(p.strip(), lineno)
+                for p in inner.rstrip(",").split(",")]
+    if v.startswith('"') and v.endswith('"') and len(v) >= 2:
+        return v[1:-1]
+    if v in ("true", "false"):
+        return v == "true"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            raise ConfigError(
+                f"podlint.toml:{lineno}: unsupported value {v!r}") from None
+
+
+@dataclasses.dataclass
+class Config:
+    exclude: List[str]
+    traced_functions: List[str]
+    rules: Dict[str, dict]  # code -> merged knobs (incl. include/exclude)
+
+    def rule_cfg(self, code: str, defaults: Dict[str, object]) -> dict:
+        merged = dict(defaults)
+        merged.setdefault("include", [])
+        merged.setdefault("exclude", [])
+        merged.update(self.rules.get(code, {}))
+        return merged
+
+    def rule_applies(self, code: str, defaults: Dict[str, object],
+                     relpath: str) -> bool:
+        cfg = self.rule_cfg(code, defaults)
+        p = PurePosixPath(relpath).as_posix()
+        inc = cfg["include"]
+        if inc and not any(fnmatch.fnmatch(p, g) for g in inc):
+            return False
+        return not any(fnmatch.fnmatch(p, g) for g in cfg["exclude"])
+
+    def file_excluded(self, relpath: str) -> bool:
+        p = PurePosixPath(relpath).as_posix()
+        return any(fnmatch.fnmatch(p, g) for g in self.exclude)
+
+
+DEFAULT_EXCLUDE = ["**/__pycache__/**", "**/.git/**"]
+
+
+def load_config(path: Optional[str], known_codes) -> Config:
+    data: dict = {}
+    if path is not None:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                data = _load_toml(fh.read())
+        except FileNotFoundError:
+            raise ConfigError(f"config file not found: {path}") from None
+        except Exception as e:  # tomllib.TOMLDecodeError and friends
+            if isinstance(e, ConfigError):
+                raise
+            raise ConfigError(f"cannot parse {path}: {e}") from e
+    top = data.get("podlint", {})
+    unknown = set(top) - {"exclude", "traced_functions"}
+    if unknown:
+        raise ConfigError(f"[podlint]: unknown keys {sorted(unknown)}")
+    rules = data.get("rule", {})
+    bad = set(rules) - set(known_codes)
+    if bad:
+        raise ConfigError(
+            f"[rule.*]: unknown rule codes {sorted(bad)} "
+            f"(known: {sorted(known_codes)})")
+    return Config(
+        exclude=list(top.get("exclude", [])) + DEFAULT_EXCLUDE,
+        traced_functions=list(top.get("traced_functions", [])),
+        rules={code: dict(tbl) for code, tbl in rules.items()},
+    )

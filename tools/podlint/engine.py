@@ -1,0 +1,141 @@
+"""File discovery, suppression handling, and the lint driver.
+
+Suppressions::
+
+    x = jnp.zeros((K,))  # podlint: ignore[PL001] -- readout-only buffer
+    # podlint: skip-file        (first 5 lines: whole file is exempt)
+
+``ignore`` without a bracket list suppresses every rule on that line;
+with a list, only those codes.  A rationale after ``--`` is convention,
+not syntax — but the sweep policy (DESIGN.md §12) requires one.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .analysis import ModuleModel
+from .config import Config, load_config
+from .rules import REGISTRY, Finding
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*podlint:\s*(ignore|skip-file)(?:\[([A-Z0-9,\s]+)\])?")
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    suppressed: int
+    files: int
+    errors: List[str]  # config/usage problems -> exit 2
+
+
+def _suppressions(source: str) -> Tuple[bool, Dict[int, Optional[Set[str]]]]:
+    """-> (skip_file, {line: None (all rules) | {codes}})."""
+    by_line: Dict[int, Optional[Set[str]]] = {}
+    skip = False
+    for lineno, line in enumerate(source.splitlines(), 1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        if m.group(1) == "skip-file":
+            if lineno <= 5:
+                skip = True
+            continue
+        codes = m.group(2)
+        by_line[lineno] = (None if codes is None else
+                           {c.strip() for c in codes.split(",") if c.strip()})
+    return skip, by_line
+
+
+def discover(paths: Sequence[str], cfg: Config, root: str
+             ) -> Tuple[List[str], List[str]]:
+    """-> (python files, errors).  Paths are kept relative to ``root``
+    so config globs and the reporter agree on spelling."""
+    files: List[str] = []
+    errors: List[str] = []
+    for p in paths:
+        full = Path(root) / p
+        if full.is_file():
+            candidates = [full] if full.suffix == ".py" else []
+            if not candidates:
+                errors.append(f"not a python file: {p}")
+        elif full.is_dir():
+            candidates = sorted(full.rglob("*.py"))
+        else:
+            errors.append(f"no such file or directory: {p}")
+            continue
+        for f in candidates:
+            rel = os.path.relpath(f, root).replace(os.sep, "/")
+            if not cfg.file_excluded(rel):
+                files.append(rel)
+    return files, errors
+
+
+def lint_source(source: str, relpath: str, cfg: Config,
+                select: Optional[Set[str]] = None,
+                ignore: Optional[Set[str]] = None
+                ) -> Tuple[List[Finding], int]:
+    """Lint one module's text -> (findings, n_suppressed)."""
+    skip, by_line = _suppressions(source)
+    if skip:
+        return [], 0
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as e:
+        return [Finding(relpath, e.lineno or 1, (e.offset or 0) + 1,
+                        "PL000", f"parse error: {e.msg}")], 0
+    model = ModuleModel(relpath, tree, source,
+                        tuple(cfg.traced_functions))
+    findings: List[Finding] = []
+    suppressed = 0
+    for code, rule_cls in sorted(REGISTRY.items()):
+        if select and code not in select:
+            continue
+        if ignore and code in ignore:
+            continue
+        if not cfg.rule_applies(code, rule_cls.defaults, relpath):
+            continue
+        rule = rule_cls()
+        rcfg = cfg.rule_cfg(code, rule_cls.defaults)
+        for f in rule.check(model, rcfg):
+            sup = by_line.get(f.line, "absent")
+            if sup is None or (sup != "absent" and f.code in sup):
+                suppressed += 1
+            else:
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return findings, suppressed
+
+
+def lint_paths(paths: Sequence[str], *,
+               config_path: Optional[str] = None,
+               root: str = ".",
+               select: Optional[Iterable[str]] = None,
+               ignore: Optional[Iterable[str]] = None) -> LintResult:
+    try:
+        cfg = load_config(config_path, REGISTRY.keys())
+    except Exception as e:
+        return LintResult([], 0, 0, [str(e)])
+    select = {s for s in (select or ())} or None
+    ignore = {s for s in (ignore or ())} or None
+    for s in (select or set()) | (ignore or set()):
+        if s not in REGISTRY:
+            return LintResult([], 0, 0, [
+                f"unknown rule code {s!r} (known: {sorted(REGISTRY)})"])
+    files, errors = discover(paths, cfg, root)
+    if errors:
+        return LintResult([], 0, 0, errors)
+    findings: List[Finding] = []
+    suppressed = 0
+    for rel in files:
+        with open(os.path.join(root, rel), encoding="utf-8") as fh:
+            source = fh.read()
+        fs, sup = lint_source(source, rel, cfg, select, ignore)
+        findings.extend(fs)
+        suppressed += sup
+    return LintResult(findings, suppressed, len(files), [])

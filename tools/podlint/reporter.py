@@ -1,0 +1,26 @@
+"""Rendering: ``file:line:col: CODE message`` lines plus a summary,
+optionally mirrored to a report file (the CI artifact)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from .engine import LintResult
+
+
+def render(result: LintResult, *, command: str = "") -> str:
+    lines = [f.render() for f in result.findings]
+    lines.append(
+        f"podlint: {len(result.findings)} finding"
+        f"{'s' if len(result.findings) != 1 else ''} "
+        f"({result.suppressed} suppressed) across {result.files} files"
+        + (f" [{command}]" if command else ""))
+    return "\n".join(lines)
+
+
+def emit(result: LintResult, *, report_path: Optional[str] = None,
+         command: str = "") -> str:
+    text = render(result, command=command)
+    if report_path:
+        with open(report_path, "w", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+    return text

@@ -1,0 +1,19 @@
+"""PL001 fixture: the PR 2-style bf16 carry — a gains carry and a
+threshold buffer built without a dtype silently run the whole scan in
+float32 (or float64 under x64) while ``f.dtype`` is bfloat16."""
+import jax
+import jax.numpy as jnp
+
+
+def run_batched(f, state, X):
+    def body(carry, x):
+        gains = carry + f.gains(state, x)
+        return gains, None
+
+    carry = jnp.zeros((X.shape[0],))  # BAD: implicit float32 carry
+    out, _ = jax.lax.scan(body, carry, X)
+    return out
+
+
+def init(f):
+    return jnp.full((f.K,), jnp.inf)  # BAD: weights silently float32

@@ -1,0 +1,22 @@
+"""PL001 fixture, repaired: every creation says its dtype — carries
+follow ``f.dtype`` (the PR 2 / PR 4 carry discipline), counters are
+explicit int32."""
+import jax
+import jax.numpy as jnp
+
+
+def run_batched(f, state, X):
+    def body(carry, x):
+        gains = carry + f.gains(state, x)
+        return gains, None
+
+    carry = jnp.zeros((X.shape[0],), f.dtype)
+    out, _ = jax.lax.scan(body, carry, X)
+    return out
+
+
+def init(f):
+    weights = jnp.full((f.K,), jnp.inf, f.dtype)
+    seen = jnp.zeros((), jnp.int32)
+    mask = jnp.ones((f.K,), dtype=bool)
+    return weights, seen, mask

@@ -1,0 +1,25 @@
+"""PL002 fixture: the PR 5 deadlock class — a blocking enqueue while
+holding the router lock.  The buffer's ``block`` policy waits for
+space; the thing that frees space mid-handoff is ``migrate()``, which
+needs this very lock."""
+import threading
+
+
+class Router:
+    def __init__(self, buffers):
+        self.buffers = buffers
+        self._table = {}
+        self._lock = threading.Lock()
+
+    def put(self, sids, X, timeout=None):
+        with self._lock:
+            for sid, row in zip(sids, X):
+                pid = self._table.get(int(sid), -1)
+                if pid >= 0:
+                    # BAD: block-policy put under the router lock
+                    self.buffers[pid].put([sid], [row], timeout=timeout)
+
+    def drain(self, sock):
+        with self._lock:
+            frame = sock.recv(4096)  # BAD: socket read under the lock
+            return frame

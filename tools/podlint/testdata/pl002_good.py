@@ -1,0 +1,26 @@
+"""PL002 fixture, repaired: the lock only guards the table read; the
+blocking enqueue happens outside the critical section (the actual PR 5
+fix in ``ingest.PodRouter.put``)."""
+import threading
+
+
+class Router:
+    def __init__(self, buffers):
+        self.buffers = buffers
+        self._table = {}
+        self._lock = threading.Lock()
+
+    def put(self, sids, X, timeout=None):
+        with self._lock:
+            dest = [self._table.get(int(sid), -1) for sid in sids]
+        for pid in set(dest):
+            if pid < 0:
+                continue
+            batch = [(s, r) for s, r, p in zip(sids, X, dest) if p == pid]
+            self.buffers[pid].put([s for s, _ in batch],
+                                  [r for _, r in batch], timeout=timeout)
+
+    def drain(self, sock):
+        frame = sock.recv(4096)
+        with self._lock:
+            return self._table, frame

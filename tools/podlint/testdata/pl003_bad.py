@@ -1,0 +1,19 @@
+"""PL003 fixture: reading a variable after donating it to a jitted
+step (the ``ingest.pipeline`` donation pattern, mis-used).  On an
+accelerator the donated buffer is dead; on CPU it silently works —
+exactly the kind of bug tier-1 cannot catch."""
+import jax
+
+
+def drive(pod, state, batches):
+    advance = jax.jit(pod.ingest_routed, donate_argnums=(0,))
+    for chunks, counts in batches:
+        new_state, stats = advance(state, chunks, counts)
+        print(state.items)  # BAD: `state` was donated to `advance`
+        state = new_state
+    return state
+
+
+def one_shot(step, state, x):
+    out = jax.jit(step, donate_argnums=0)(state, x)
+    return out, state  # BAD: donated `state` escapes

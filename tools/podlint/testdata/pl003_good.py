@@ -1,0 +1,17 @@
+"""PL003 fixture, repaired: the donated name is rebound to the call's
+result in the same statement — the canonical
+``state, _ = advance(state, ...)`` shape from ``ingest.pipeline``."""
+import jax
+
+
+def drive(pod, state, batches):
+    advance = jax.jit(pod.ingest_routed, donate_argnums=(0,))
+    for chunks, counts in batches:
+        state, stats = advance(state, chunks, counts)
+        print(stats)
+    return state
+
+
+def one_shot(step, state, x):
+    state = jax.jit(step, donate_argnums=0)(state, x)
+    return state

@@ -1,0 +1,26 @@
+"""PL004 fixture: host syncs inside functions reachable from the
+jitted step — each ``float()`` / ``.item()`` / ``np.asarray`` is a
+device round-trip that turns the fused pod step back into a per-item
+dispatch loop (or a TracerConversionError under jit)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def accept(state, x, threshold):
+    gain = jnp.dot(state, x)
+    return float(gain) >= threshold  # BAD: host sync on a traced value
+
+
+def step(state, x, threshold):
+    if accept(state, x, threshold):
+        state = state + x
+    host = np.asarray(state)  # BAD: device->host copy in the hot path
+    return state, host.sum().item()
+
+
+def run(state, X, threshold):
+    stepped = jax.jit(step)
+    for x in X:
+        state, _ = stepped(state, x, threshold)
+    return state

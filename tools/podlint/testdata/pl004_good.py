@@ -1,0 +1,25 @@
+"""PL004 fixture, repaired: the traced step stays on device
+(``jnp.where`` instead of a host-synced branch); conversions happen in
+the host-side driver, outside the trace."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def accept(state, x, threshold):
+    gain = jnp.dot(state, x)
+    return gain >= threshold
+
+
+def step(state, x, threshold):
+    take = accept(state, x, threshold)
+    state = jnp.where(take, state + x, state)
+    n = x.shape[0]  # static trace-time metadata is fine
+    return state, n
+
+
+def run(state, X, threshold):
+    stepped = jax.jit(step)
+    for x in X:
+        state, _ = stepped(state, x, threshold)
+    return state, np.asarray(state)  # host copy in the driver: fine

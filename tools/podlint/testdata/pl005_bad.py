@@ -1,0 +1,21 @@
+"""PL005 fixture: Python control flow on traced array truthiness —
+``TracerBoolConversionError`` under jit, or worse, a silently baked-in
+branch when the value happens to be concrete at trace time."""
+import jax
+import jax.numpy as jnp
+
+
+def step(state, x, eps):
+    gain = jnp.dot(state, x)
+    if gain > eps:  # BAD: Python `if` on a traced comparison
+        state = state + x
+    while jnp.any(state > 1.0):  # BAD: Python `while` on a jnp reduction
+        state = state * 0.5
+    return state
+
+
+def run(state, X, eps):
+    stepped = jax.jit(step)
+    for x in X:
+        state = stepped(state, x, eps)
+    return state

@@ -1,0 +1,23 @@
+"""PL005 fixture, repaired: data-dependent control flow through
+``jnp.where`` / ``jax.lax.while_loop``; static Python branches
+(``is None``, ``isinstance``) remain legitimate and unflagged."""
+import jax
+import jax.numpy as jnp
+
+
+def step(state, x, eps, kern=None):
+    if kern is None:  # static trace-time branch: fine
+        gain = jnp.dot(state, x)
+    else:
+        gain = jnp.dot(state * kern, x)
+    state = jnp.where(gain > eps, state + x, state)
+    state = jax.lax.while_loop(
+        lambda s: jnp.any(s > 1.0), lambda s: s * 0.5, state)
+    return state
+
+
+def run(state, X, eps):
+    stepped = jax.jit(step)
+    for x in X:
+        state = stepped(state, x, eps)
+    return state
