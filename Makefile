@@ -4,13 +4,17 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: verify lint analyze bench-oracle bench-serve bench-ingest \
-	bench-autoscale bench-podstep bench-gate bench
+	bench-autoscale bench-podstep bench-obs bench-gate bench
 
 # tier-1: the gate every PR must keep green.  JUNIT=<path> additionally
-# writes a junit XML report (CI uploads it as an artifact).
+# writes a junit XML report; OBS_DUMP=<dir> dumps the suite's telemetry
+# (metrics snapshot + span JSONL, see tests/conftest.py) — CI uploads
+# both as artifacts.
 JUNIT ?=
+OBS_DUMP ?=
 verify:
-	python -m pytest -x -q $(if $(JUNIT),--junitxml=$(JUNIT))
+	$(if $(OBS_DUMP),REPRO_OBS_DUMP=$(OBS_DUMP) )python -m pytest -x -q \
+		$(if $(JUNIT),--junitxml=$(JUNIT))
 
 # static checks: ruff (config in ruff.toml) + the repo-native podlint
 # pass (config in podlint.toml); CI runs this as a separate job
@@ -44,11 +48,16 @@ bench-autoscale:
 bench-podstep:
 	python -m benchmarks.podstep_bench --smoke --json BENCH_podstep.json
 
+# telemetry-layer overhead A/B (bare vs instrumented ingest) plus the
+# OBS_* sample artifacts -> BENCH_obs.json
+bench-obs:
+	python -m benchmarks.obs_bench --smoke --json BENCH_obs.json
+
 # bench-regression gate: diff the fresh BENCH_*.json in the working tree
 # against the committed baselines (git HEAD); >25% slowdown fails.
 # CI runs one file per matrix job: make bench-gate BENCHES=BENCH_serve.json
 BENCHES ?= BENCH_oracle.json BENCH_serve.json BENCH_ingest.json \
-	BENCH_autoscale.json BENCH_podstep.json
+	BENCH_autoscale.json BENCH_podstep.json BENCH_obs.json
 bench-gate:
 	python -m benchmarks.check_regression --fresh $(BENCHES) --from-git HEAD
 

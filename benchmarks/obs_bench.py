@@ -1,0 +1,195 @@
+"""Telemetry overhead: the <2% tax of the obs layer on the ingest path.
+
+The fleet telemetry layer (``repro.obs``, DESIGN.md §13) records ONLY at
+host-sync boundaries — ``IngestPipeline.run()`` drains the device
+ledgers after its ``block_until_ready``, never inside the jitted step —
+so instrumentation must cost a fixed few microseconds per *run*, not
+per item.  This bench proves it: the SAME pod (one compiled program,
+shared via the ``_advance_for`` cache) is driven through identical
+pre-generated feeds by two pipelines, one with ``metrics=obs.NULL``
+(bare) and one recording into the default registry (instrumented),
+interleaved A/B in alternating order — throughput reported best-of
+(host noise is additive, the floor is the cost), the overhead ratio as
+the median of per-repeat paired ratios (back-to-back arms cancel
+scheduler drift inside each pair):
+
+    PYTHONPATH=src python -m benchmarks.obs_bench --json BENCH_obs.json
+
+``bare_items_per_sec`` / ``instrumented_items_per_sec`` join the CI
+bench-regression gate like any other throughput metric;
+``overhead_ratio`` (instrumented / bare) is deliberately NOT gated — it
+divides two noisy numbers — but the committed baseline documents the
+claim: >= 0.98, i.e. under 2% overhead at S=64.
+
+Side artifacts next to the JSON: ``OBS_metrics_snapshot.json`` (the
+instrumented arm's registry) and ``OBS_spans.jsonl`` (control-plane
+spans from a router admit/evict round-trip) — a reviewable sample of
+what the layer emits in production.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.api import make
+from repro.data import MixtureSpec, session_stream
+from repro.ingest import IngestPipeline, PodRouter, TaggedBuffer
+from repro.serve import SummarizerPod
+
+
+def _admitted_state(pod: SummarizerPod, S: int):
+    state = pod.init()
+    admit = jax.jit(pod.admit)
+    for sid in range(S):
+        state, _, _ = admit(state, jnp.int32(sid))
+    return state
+
+
+def _one_run(pod, state, feed, batch: int, metrics) -> tuple:
+    """Fresh pipeline over the (reused) feed; timed around run() so the
+    post-sync ``_record_run`` drain is INSIDE the measured window —
+    that drain is exactly the cost under test."""
+    pipe = IngestPipeline(pod=pod, source=list(feed), batch=batch,
+                          metrics=metrics)
+    t0 = time.perf_counter()
+    state, stats = pipe.run(state)
+    wall = time.perf_counter() - t0
+    assert stats["batches"] == len(feed)
+    return state, wall
+
+
+def bench_overhead(S: int, *, K: int, d: int, chunk: int, iters: int,
+                   repeats: int, warmup: int = 1) -> dict:
+    algo = make("threesieves", K=K, d=d, T=500, eps=1e-3)
+    pod = SummarizerPod(algo=algo, sessions=S, chunk=chunk)
+    # both arms share ONE compiled ingest program (hashable_lru on the
+    # pod), so the A/B isolates recording cost, not compile luck
+    bare_state = _admitted_state(pod, S)
+    instr_state = _admitted_state(pod, S)
+
+    batch = max(S * chunk // 2, chunk)
+    stream = session_stream(0, MixtureSpec(n_components=8, d=d, spread=5.0),
+                            S, batch)
+    feed = [next(stream) for _ in range(iters)]
+
+    bare_walls, instr_walls = [], []
+    for rep in range(warmup + repeats):
+        # alternate arm order so scheduler/cache drift cancels instead of
+        # biasing whichever arm runs second
+        arms = [(obs.NULL, True), (None, False)]
+        if rep % 2:
+            arms.reverse()
+        for metrics, is_bare in arms:
+            if is_bare:
+                bare_state, w = _one_run(pod, bare_state, feed, batch,
+                                         metrics)
+            else:
+                instr_state, w = _one_run(pod, instr_state, feed, batch,
+                                          metrics)
+            if rep >= warmup:  # rep 0 absorbs compile + the fill phase
+                (bare_walls if is_bare else instr_walls).append(w)
+
+    # two estimators for two jobs: min-of-repeats for the absolute
+    # throughput numbers (host noise is additive, so the floor is the
+    # faithful per-arm cost), and the MEDIAN OF PAIRED per-repeat ratios
+    # for the overhead — the arms of one repeat run back-to-back, so
+    # scheduler drift hits both and cancels inside each pair, and the
+    # median discards the outlier pairs that dominate a min/min ratio
+    n_items = iters * batch
+    bare_ips = n_items / min(bare_walls)
+    instr_ips = n_items / min(instr_walls)
+    paired = sorted(wb / wi for wb, wi in zip(bare_walls, instr_walls))
+    ratio = statistics.median(paired)
+
+    # the direct measurement backing the ratio: one run()'s whole
+    # telemetry flush (4 counters + histogram + device-ledger drain)
+    pipe = IngestPipeline(pod=pod, source=[], batch=batch)
+    for _ in range(3):
+        pipe._record_run(instr_state, iters, n_items, 0, 0.03)
+    t0 = time.perf_counter()
+    for _ in range(200):
+        pipe._record_run(instr_state, iters, n_items, 0, 0.03)
+    record_us = 1e6 * (time.perf_counter() - t0) / 200
+
+    return {
+        "sessions": S, "K": K, "d": d, "chunk": chunk,
+        "batch_items": batch, "iters_per_repeat": iters,
+        "repeats": repeats,
+        "bare_items_per_sec": round(bare_ips, 1),
+        "instrumented_items_per_sec": round(instr_ips, 1),
+        "overhead_ratio": round(ratio, 4),
+        "overhead_pct": round(100.0 * (1.0 - ratio), 2),
+        "record_us_per_run": round(record_us, 1),
+        "bare_wall_s": [round(w, 4) for w in bare_walls],
+        "instrumented_wall_s": [round(w, 4) for w in instr_walls],
+    }
+
+
+def emit_artifacts(pod, out_dir: Path) -> tuple:
+    """A reviewable sample of the layer's output: exercise the router's
+    admit/evict spans, then dump the instrumented arm's registry and
+    the span buffer next to the bench JSON."""
+    rec = obs.get_recorder()
+    rec.clear()
+    router = PodRouter(pipelines={
+        0: IngestPipeline(pod=pod, buffer=TaggedBuffer(capacity=64),
+                          batch=32)})
+    router.assign(range(4), 0)
+    router.unassign(range(4))
+    obs.drain.drain_router(router)
+
+    snap_path = out_dir / "OBS_metrics_snapshot.json"
+    span_path = out_dir / "OBS_spans.jsonl"
+    snap_path.write_text(obs.get_registry().snapshot().to_json())
+    rec.dump_jsonl(span_path)
+    return snap_path, span_path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_obs.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer batches per repeat)")
+    ap.add_argument("--sessions", type=int, default=64)
+    args = ap.parse_args()
+
+    obs.reset_default_registry()
+    iters = 8 if args.smoke else 24
+    repeats = 21 if args.smoke else 31
+
+    r = bench_overhead(args.sessions, K=32, d=64, chunk=32,
+                       iters=iters, repeats=repeats)
+    print(f"S={r['sessions']:4d}  bare {r['bare_items_per_sec']:>12.1f} "
+          f"items/s  instrumented {r['instrumented_items_per_sec']:>12.1f} "
+          f"items/s  ratio {r['overhead_ratio']:.4f} "
+          f"({r['overhead_pct']:+.2f}% overhead, "
+          f"{r['record_us_per_run']:.1f} us/run recorded)")
+
+    out_path = Path(args.json)
+    algo = make("threesieves", K=32, d=64, T=500, eps=1e-3)
+    pod = SummarizerPod(algo=algo, sessions=8, chunk=32)
+    snap, spans = emit_artifacts(pod, out_path.parent)
+
+    out = {
+        "bench": "obs_overhead",
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "note": "identical feed + ONE shared compiled program per arm; "
+                "recording happens only at run()'s host-sync boundary, so "
+                "overhead_ratio (instrumented/bare, ungated) stays >= 0.98 "
+                "— under 2% — at S=64",
+        "row": r,
+    }
+    out_path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {args.json}; artifacts: {snap}, {spans}")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ tests/test_autoscale.py).
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import make
 from repro.ingest import DriftSource, IngestPipeline, PodRouter, TaggedBuffer
 from repro.serve import PodAutoscaler, ScalePolicy, SummarizerPod
@@ -91,3 +92,20 @@ for pid, pod in pods.items():
 print(f"router unrouted drops: {sum(router.drops_unrouted.values())}")
 print(f"victim no-ops counted: {asc.skipped_unknown}")
 assert sum(router.drops_unrouted.values()) == 0
+
+# everything above was ALSO recorded by the telemetry layer as it ran
+# (DESIGN.md §13): pipeline runs + the autoscaler's signals()/handoff
+# calls drained the device ledgers, and each handoff phase left a span
+snap = obs.get_registry().snapshot()
+print("\ntelemetry (repro.obs):")
+for name in ("ingest_items_total", "drops_total", "handoffs_total",
+             "sessions_migrated_total", "backlog_items_migrated_total",
+             "xla_compile_total"):
+    for s in next((f["series"] for f in snap.families
+                   if f["name"] == name), []):
+        lbl = ",".join(f"{k}={v}" for k, v in sorted(s["labels"].items()))
+        print(f"  {name}{{{lbl}}} = {s['value']:g}")
+phases = [e["name"] for e in obs.get_recorder().events
+          if e["name"] in ("quiesce", "snapshot", "restore", "evict",
+                           "flip")]
+print(f"  handoff phase spans recorded: {phases}")

@@ -33,6 +33,8 @@ import jax
 import ml_dtypes  # noqa: F401  (registers bfloat16 & friends with numpy)
 import numpy as np
 
+from repro import obs
+
 COMMIT_MARK = "COMMITTED"
 MANIFEST = "MANIFEST.json"
 
@@ -74,9 +76,10 @@ class CheckpointStore:
         Joins (and re-raises any failure of) an in-flight async save
         first — sync and async writes must never race on a step dir.
         """
-        self.wait()
-        host = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
-        return self._write(step, host, extra or {})
+        with obs.span("ckpt_save", step=step, mode="sync"):
+            self.wait()
+            host = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+            return self._write(step, host, extra or {}, mode="sync")
 
     def save_async(self, step: int, tree, extra: Optional[Dict] = None):
         """Snapshot to host now; write files on a daemon thread.
@@ -85,12 +88,16 @@ class CheckpointStore:
         from the next ``wait()`` — which this method calls first, so a
         failed previous save surfaces here rather than looking committed.
         """
-        self.wait()
-        host = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+        with obs.span("ckpt_save", step=step, mode="async"):
+            # the span prices only the synchronous cost the caller pays
+            # (join + host snapshot); the file write is the bg span below
+            self.wait()
+            host = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
 
         def _bg():
             try:
-                self._write(step, host, extra or {})
+                with obs.span("ckpt_write", step=step, mode="async"):
+                    self._write(step, host, extra or {}, mode="async")
             except BaseException as e:  # surfaced by wait()
                 self._async_exc = e
 
@@ -107,7 +114,8 @@ class CheckpointStore:
             raise RuntimeError(
                 f"async checkpoint save to {self.root} failed") from exc
 
-    def _write(self, step: int, host_tree, extra: Dict) -> Path:
+    def _write(self, step: int, host_tree, extra: Dict,
+               mode: str = "sync") -> Path:
         d = self._step_dir(step)
         tmp = d.with_suffix(".tmp")
         if tmp.exists():
@@ -134,6 +142,13 @@ class CheckpointStore:
             shutil.rmtree(d)
         tmp.rename(d)
         self._gc()
+        reg = obs.get_registry(None)
+        if reg.enabled:  # counted only once COMMITTED exists
+            reg.counter("ckpt_saves_total", "committed checkpoint saves",
+                        ("mode",)).labels(mode=mode).inc()
+            reg.counter("ckpt_saved_bytes_total",
+                        "leaf bytes written into committed checkpoints"
+                        ).inc(sum(arr.nbytes for arr in leaves.values()))
         return d
 
     def _gc(self):
@@ -162,6 +177,10 @@ class CheckpointStore:
         """Restore the pytree ``like`` (structure donor; leaves may be
         ShapeDtypeStructs).  ``shardings`` (same structure, NamedShardings)
         reshards onto the *current* mesh — elastic restart."""
+        with obs.span("ckpt_restore", step=step):
+            return self._load(step, like, shardings)
+
+    def _load(self, step: int, like, shardings=None) -> Tuple[Any, Dict]:
         d = self._step_dir(step)
         manifest = json.loads((d / MANIFEST).read_text())
 

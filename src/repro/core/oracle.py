@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.constants import GAIN_EPS
 from repro.kernels.rbf_gain import DEFAULT_BLOCK_B, fused_gains
+from repro.obs import record_backend_fallback
 
 from .functions import KernelConfig, KernelParams, traced_gain_rows
 
@@ -83,6 +84,9 @@ def resolve_backend(backend: str) -> str:
     if backend == "auto":
         return "pallas" if on_tpu else "jnp"
     if backend == "pallas" and not on_tpu:
+        # warn once, count always: the fallback counter is the durable
+        # record of which oracle path a run actually used
+        record_backend_fallback("oracle", backend, "jnp")
         _warn_once_no_tpu("repro.core.oracle.resolve_backend")
         return "jnp"
     return backend

@@ -83,6 +83,14 @@ class TaggedBuffer:
         with self._lock:
             return dict(self.drops)
 
+    def total_drops(self) -> int:
+        """Lifetime items clipped, all sessions — monotone by
+        construction (``drops`` only ever grows), so the telemetry
+        drain (``repro.obs.drain.drain_buffer``) can snapshot it as a
+        counter without per-call bookkeeping."""
+        with self._lock:
+            return sum(self.drops.values())
+
     def depths(self) -> Dict[int, int]:
         """Per-session queue depth — the autoscaler's load signal (and
         the ``largest-queue`` victim policy's ranking key)."""

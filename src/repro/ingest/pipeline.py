@@ -49,6 +49,7 @@ from typing import Dict, Iterator, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import obs
 from repro.compat import hashable_lru
 
 from .buffer import PAD_SID, TaggedBuffer
@@ -110,6 +111,8 @@ class IngestPipeline:
     min_fill: int = 1  # buffer mode: items to wait for per device batch
     # (raise toward ``batch`` when a trickling producer must not burn a
     # full jitted step per item; 1 favors latency)
+    pod_id: "object" = 0  # telemetry label; PodRouter stamps its key here
+    metrics: "object" = None  # None = process default registry; obs.NULL off
 
     def __post_init__(self):
         if (self.source is None) == (self.buffer is None):
@@ -243,6 +246,11 @@ class IngestPipeline:
             drop_overflow += int(overflow.sum())
         jax.block_until_ready(state.items)
         wall = time.perf_counter() - t0
+        # telemetry happens HERE and only here: block_until_ready above is
+        # the run's host-sync boundary, so draining the device ledgers now
+        # costs a few already-materialized (S,) transfers and zero hot-path
+        # work (DESIGN.md §13 "record at sync boundaries only")
+        self._record_run(state, batches, items, padded, wall)
         if self._feed_exc is not None:
             exc, self._feed_exc = self._feed_exc, None
             raise RuntimeError(
@@ -252,6 +260,26 @@ class IngestPipeline:
                        "padded": padded, "wall_s": wall,
                        "dropped_unknown": drop_unknown,
                        "dropped_overflow": drop_overflow}
+
+    def _record_run(self, state, batches, items, padded, wall) -> None:
+        """Flush one run()'s host-local tallies + the device ledgers into
+        the metrics registry.  Host-only, post-sync; never traced."""
+        reg = obs.get_registry(self.metrics)
+        if not reg.enabled:
+            return
+        pod = str(self.pod_id)
+        reg.counter("ingest_batches_total", "device batches dispatched",
+                    ("pod",)).labels(pod=pod).inc(batches)
+        reg.counter("ingest_items_total", "real (non-padding) items fed",
+                    ("pod",)).labels(pod=pod).inc(items)
+        reg.counter("ingest_padding_total",
+                    "PAD_SID filler rows burned in partial batches",
+                    ("pod",)).labels(pod=pod).inc(padded)
+        reg.histogram("ingest_run_seconds", "wall time of run() calls",
+                      ("pod",)).labels(pod=pod).observe(wall)
+        obs.drain.drain_pod(state, pod=pod, registry=reg)
+        if self.buffer is not None:
+            obs.drain.drain_buffer(self.buffer, pod=pod, registry=reg)
 
 
 @dataclasses.dataclass
@@ -286,6 +314,7 @@ class PodRouter:
             if pipe.buffer is None:
                 raise ValueError(
                     f"pod {pid}: PodRouter needs buffer-mode pipelines")
+            pipe.pod_id = pid  # every pipe's metrics carry its fleet id
         self._table: Dict[int, int] = {}
         self._lock = threading.Lock()
         self._feeders = []
@@ -296,16 +325,21 @@ class PodRouter:
         """Route ``sids`` to ``pod_id`` from now on (admission time)."""
         if pod_id not in self.pipelines:
             raise KeyError(f"unknown pod id {pod_id}")
-        with self._lock:
-            for sid in np.asarray(sids).ravel():
-                self._table[int(sid)] = pod_id
+        sids = np.asarray(sids).ravel()
+        with obs.span("admit", layer="router", pod=str(pod_id),
+                      sessions=len(sids)):
+            with self._lock:
+                for sid in sids:
+                    self._table[int(sid)] = pod_id
 
     def unassign(self, sids) -> None:
         """Drop table entries (eviction time); later items count as
         unrouted."""
-        with self._lock:
-            for sid in np.asarray(sids).ravel():
-                self._table.pop(int(sid), None)
+        sids = np.asarray(sids).ravel()
+        with obs.span("evict", layer="router", sessions=len(sids)):
+            with self._lock:
+                for sid in sids:
+                    self._table.pop(int(sid), None)
 
     def owner(self, sid: int) -> Optional[int]:
         with self._lock:

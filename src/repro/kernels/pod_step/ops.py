@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core.functions import LogDetState
 from repro.core.threesieves import ThreeSieves, TSState
+from repro.obs import record_backend_fallback
 
 from .kernel import pod_step_pallas
 from .ref import pod_step_ref
@@ -85,6 +86,9 @@ def resolve(backend: str | None, algo) -> str:
     if backend == "auto":
         return "pallas" if (on_tpu and fusable(algo)) else "jnp"
     if backend in ("pallas", "pallas-interpret") and not fusable(algo):
+        # warn once per process, but COUNT every degrade: the CI metrics
+        # artifact shows which path actually ran, run after run
+        record_backend_fallback("pod_step", backend, "jnp")
         _warn_once(
             f"fusable:{type(algo).__name__}",
             f"repro.kernels.pod_step: backend {backend!r} requested but "
@@ -93,6 +97,7 @@ def resolve(backend: str | None, algo) -> str:
             "vmap(run_batched) path.")
         return "jnp"
     if backend == "pallas" and not on_tpu:
+        record_backend_fallback("pod_step", backend, "jnp")
         _warn_once(
             "no-tpu",
             "repro.kernels.pod_step: backend 'pallas' requested but "

@@ -61,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.ckpt import MemoryStore
 from repro.ingest import PodRouter
 
@@ -149,7 +150,16 @@ class PodAutoscaler:
     # ---------------------------------------------------------------- signals
     def signals(self, pod_id: int, state) -> PodSignals:
         """Read one pod's load signals; the overflow baseline advances,
-        so each call sees only the drops since the previous one."""
+        so each call sees only the drops since the previous one.
+
+        Doubles as the fleet's telemetry *drain tick*: the call already
+        host-reads the pod's device ledgers (that is what a load check
+        is), so harvesting them into the metrics registry here is free —
+        no extra sync, no extra cadence (DESIGN.md §13).
+        """
+        obs.drain.drain_pod(state, pod=str(pod_id))
+        obs.drain.drain_buffer(self.router.pipelines[pod_id].buffer,
+                               pod=str(pod_id))
         active = np.asarray(state.active)
         sid = np.asarray(state.sid)
         over = np.asarray(state.drops_overflow)
@@ -224,7 +234,49 @@ class PodAutoscaler:
         Returns the updated states dict and a :class:`HandoffReport`.
         Refusals are atomic (nothing quiesced, nothing moved); unknown
         or already-evicted sids are skipped and counted.
+
+        Telemetry: the whole protocol runs under a ``handoff`` span with
+        one child span per phase (quiesce/snapshot/restore/evict/flip);
+        a refusal closes the parent with ``outcome="refused"`` and NO
+        phase children — the span tree is the protocol's audit trail.
+        Both pods' device ledgers are drained after a successful move (a
+        handoff edge is a host-sync boundary: the states were just
+        gathered/rebuilt on host).
         """
+        reg = obs.get_registry(None)
+        with obs.span("handoff", src=str(src), dst=str(dst)) as sp:
+            try:
+                states, rep = self._handoff(states, src, dst, session_ids)
+            except BaseException:
+                if reg.enabled:
+                    reg.counter("handoffs_total", self._HANDOFF_HELP,
+                                ("outcome",)).labels(outcome="error").inc()
+                raise
+            sp.set(moved=len(rep.moved), skipped=len(rep.skipped),
+                   backlog_items=rep.backlog_items, reason=rep.reason)
+            if not rep.ok:
+                sp.set_outcome("refused")
+            if reg.enabled:
+                reg.counter("handoffs_total", self._HANDOFF_HELP,
+                            ("outcome",)).labels(
+                    outcome="ok" if rep.ok else "refused").inc()
+                reg.counter("sessions_migrated_total",
+                            "sessions moved between pods, fleet-wide"
+                            ).inc(len(rep.moved))
+                reg.counter("backlog_items_migrated_total",
+                            "parked backlog items forwarded at table flips"
+                            ).inc(rep.backlog_items)
+                if rep.ok and rep.moved:
+                    obs.drain.drain_pod(states[src], pod=str(src),
+                                        registry=reg)
+                    obs.drain.drain_pod(states[dst], pod=str(dst),
+                                        registry=reg)
+        return states, rep
+
+    _HANDOFF_HELP = "two-pod session migrations by outcome"
+
+    def _handoff(self, states: Dict[int, "object"], src: int, dst: int,
+                 session_ids) -> Tuple[Dict[int, "object"], HandoffReport]:
         t0 = time.perf_counter()
         src_pod, dst_pod = self.pods[src], self.pods[dst]
         src_state, dst_state = states[src], states[dst]
@@ -262,28 +314,35 @@ class PodAutoscaler:
             return states, report(True, "no live victims (no-op)")
 
         # 1. park the victims' stream at the front-end (buffer, don't drop)
-        self.router.quiesce(moving)
+        with obs.span("quiesce", sessions=len(moving)):
+            self.router.quiesce(moving)
         try:
             # 2. snapshot ONLY the victim rows (one device gather of the
             # selected slots per leaf — the quiesce window must scale
             # with the victim count, not the pod width) and migrate them
             # into dst's free slots via the existing slot-subset
             # checkpoint path, pointed at a MemoryStore
-            slots = jnp.asarray([table[s] for s in moving])
-            compact = jax.tree_util.tree_map(lambda l: l[slots], src_state)
-            store = MemoryStore(keep=1)
-            store.save(0, compact)
-            merged, _ = dst_pod.restore(
-                store, 0, slots=np.arange(len(moving)), into=dst_state,
-                saved_sessions=len(moving))
+            with obs.span("snapshot", sessions=len(moving)):
+                slots = jnp.asarray([table[s] for s in moving])
+                compact = jax.tree_util.tree_map(
+                    lambda l: l[slots], src_state)
+                store = MemoryStore(keep=1)
+                store.save(0, compact)
+            with obs.span("restore", pod=str(dst)):
+                merged, _ = dst_pod.restore(
+                    store, 0, slots=np.arange(len(moving)), into=dst_state,
+                    saved_sessions=len(moving))
             # 3. free the source slots in one masked select
-            new_src = src_pod.evict_sids(
-                src_state, jnp.asarray(moving, jnp.int32))
+            with obs.span("evict", pod=str(src), sessions=len(moving)):
+                new_src = src_pod.evict_sids(
+                    src_state, jnp.asarray(moving, jnp.int32))
         except BaseException:
             self.router.release(moving)  # un-park; the stream resumes at src
             raise
         # 4. flip the table and forward the parked backlog — zero drops
-        backlog = self.router.migrate(moving, dst)
+        with obs.span("flip", dst=str(dst)) as flip_sp:
+            backlog = self.router.migrate(moving, dst)
+            flip_sp.set(backlog_items=backlog)
         out = dict(states)
         out[src], out[dst] = new_src, merged
         return out, report(True, moved=moving, backlog=backlog)
@@ -295,6 +354,7 @@ class PodAutoscaler:
         """One policy step: find the hottest tripping pod, hand victims
         to the pod with the most free slots.  Returns ``(states, None)``
         when nothing trips (or no target can host)."""
+        obs.drain.drain_router(self.router)  # the check IS the drain tick
         picture = {pid: self.signals(pid, states[pid]) for pid in self.pods}
         hot = [(pid, reason) for pid, sig in picture.items()
                for ok, reason in [self.hot(sig)] if ok]

@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.compat import hashable_lru
 from repro.core.sieve_family import SieveAlgorithm, stack_states, tree_select
 from repro.core.spec import HyperParams, SessionSpec
@@ -446,6 +447,19 @@ class SummarizerPod:
         return PodReadout(feats=feats, n=n, fval=fval, active=state.active,
                           drops=drops, specs=getattr(state.algo, "hp", None))
 
+    def drain_metrics(self, state: PodState, *, pod: str = "0",
+                      registry=None) -> None:
+        """Harvest this pod's device ledgers into host metrics.
+
+        Host-only, and ONLY at a host-sync boundary (a readout, a
+        handoff edge, the end of a pipeline run) — the delegation target
+        ``repro.obs.drain.drain_pod`` documents the rule.  Never jit or
+        trace this (podlint PL004/PL006 enforce it statically; the pod's
+        own traced methods — admit, evict, ingest — stay telemetry-free
+        precisely so callers can keep jitting them).
+        """
+        obs.drain.drain_pod(state, pod=pod, registry=registry)
+
     # -------------------------------------------------------------- scale-out
     def make_sharded_update(self, mesh, axis="data", *,
                             pre_routed: bool = False):
@@ -513,7 +527,11 @@ class SummarizerPod:
                 state, stats = pipeline.run(state, max_batches=n)
                 for k, v in stats.items():
                     total[k] = total.get(k, 0) + v
-                state, _ = drift(state)
+                # host-side control plane between pipeline runs — safe to
+                # span here (the drift program itself stays untouched)
+                with obs.span("drift_reset", pod=str(pipeline.pod_id),
+                              every=drift_every):
+                    state, _ = drift(state)
                 if remaining is not None:
                     remaining -= stats["batches"]
                     if remaining <= 0:

@@ -110,3 +110,23 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "timeout(seconds): per-test timeout for tests that touch sockets")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """CI observability artifact: when REPRO_OBS_DUMP names a directory,
+    write the suite's accumulated metrics snapshot + span JSONL there
+    (uploaded by the tier-1 workflow; `make verify OBS_DUMP=dir`)."""
+    out = os.environ.get("REPRO_OBS_DUMP")
+    if not out:
+        return
+    try:
+        from repro import obs
+        d = pathlib.Path(out)
+        d.mkdir(parents=True, exist_ok=True)
+        (d / "metrics_snapshot.json").write_text(
+            obs.get_registry().snapshot().to_json())
+        (d / "metrics.prom").write_text(
+            obs.get_registry().snapshot().to_prometheus())
+        obs.get_recorder().dump_jsonl(d / "spans.jsonl")
+    except Exception as e:  # telemetry must never fail the suite
+        sys.stderr.write(f"REPRO_OBS_DUMP failed: {e}\n")

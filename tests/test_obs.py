@@ -1,0 +1,441 @@
+"""Tier-1 tests for the fleet telemetry layer (repro.obs, DESIGN.md §13).
+
+Covers the four pieces and the one rule:
+
+  * registry — counters/gauges/histograms with labels, signature
+    conflicts, JSON snapshot round-trip, Prometheus exposition, the
+    ``NULL`` off-switch;
+  * spans — nesting, outcomes (ok/refused/error), the trace-time no-op
+    backstop, JSONL dump;
+  * jax bridge — exactly one subscription ever, and its compile counter
+    agrees with the retrace_guard fixture counting the same events;
+  * drain — cumulative device/host ledgers become monotone counters
+    (including the slot-recycle counter-reset rule), and the three drop
+    ledgers unify under ``drops_total{layer,reason}``;
+  * instrumented stack — an ingest run records at its sync boundary
+    with ZERO fresh compiles (telemetry must not retrace the pod), a
+    refused handoff leaves a ``refused`` span with no phase children, a
+    successful one leaves the full phase tree, checkpoint save/restore
+    leave spans, and backend degrades are counted per event.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import jaxbridge
+from repro.obs.registry import MetricsSnapshot
+
+# --------------------------------------------------------------------------
+# isolation: every test gets a fresh default registry + a cleared recorder
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture
+def fresh_obs():
+    reg = obs.reset_default_registry()
+    rec = obs.get_recorder()
+    rec.clear()
+    yield reg, rec
+    obs.reset_default_registry()
+    rec.clear()
+
+
+# ------------------------------------------------------------------ registry
+def test_counter_gauge_histogram_basics(fresh_obs):
+    reg, _ = fresh_obs
+    c = reg.counter("reqs_total", "requests", ("pod",))
+    c.labels(pod="0").inc()
+    c.labels(pod="0").inc(2)
+    c.labels(pod="1").inc(5)
+    g = reg.gauge("depth", "queue depth")
+    g.set(7)
+    g.dec(2)
+    h = reg.histogram("lat_seconds", "latency")
+    h.observe(0.004)
+    h.observe(99.0)  # lands in the +inf bucket
+    snap = reg.snapshot()
+    assert snap.get("reqs_total", pod="0") == 3
+    assert snap.get("reqs_total", pod="1") == 5
+    assert snap.get("depth") == 5
+    fam = [f for f in snap.families if f["name"] == "lat_seconds"][0]
+    assert fam["series"][0]["count"] == 2
+    assert fam["series"][0]["counts"][-1] == 1  # the 99s observation
+
+
+def test_label_and_signature_contracts(fresh_obs):
+    reg, _ = fresh_obs
+    fam = reg.counter("x_total", "x", ("pod",))
+    with pytest.raises(ValueError, match="label"):
+        fam.labels(shard="0")  # wrong label name
+    with pytest.raises(ValueError, match="cannot decrease"):
+        fam.labels(pod="0").inc(-1)
+    with pytest.raises(ValueError, match="cannot set"):
+        reg.counter("y_total").set(3)
+    # idempotent re-registration with the same signature is fine...
+    assert reg.counter("x_total", "x", ("pod",)) is fam
+    # ...a conflicting one is how dashboards lie — it raises
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total", "x", ("pod",))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("x_total", "x", ("shard",))
+
+
+def test_snapshot_json_round_trip_and_prometheus(fresh_obs):
+    reg, _ = fresh_obs
+    reg.counter("a_total", "help text", ("k",)).labels(k="v").inc(3)
+    reg.histogram("h_seconds", "hist").observe(0.2)
+    snap = reg.snapshot()
+    back = MetricsSnapshot.from_json(snap.to_json())
+    assert back.families == snap.families
+    json.loads(snap.to_json())  # strict JSON (no Infinity literals)
+    prom = snap.to_prometheus()
+    assert '# TYPE a_total counter' in prom
+    assert 'a_total{k="v"} 3' in prom
+    assert 'le="+Inf"' in prom  # the 1e308 sentinel renders as +Inf
+    assert prom.endswith("\n")
+
+
+def test_null_registry_is_inert(fresh_obs):
+    n = obs.NULL
+    assert not n.enabled
+    n.counter("x_total").labels(pod="0").inc()
+    n.gauge("g").set(4)
+    n.histogram("h").observe(1.0)
+    assert n.snapshot().families == []
+    assert n.to_prometheus() == ""
+    assert obs.get_registry(n) is n
+    assert obs.get_registry(None) is not n
+
+
+# --------------------------------------------------------------------- spans
+def test_spans_nest_and_record_outcomes(fresh_obs):
+    reg, rec = fresh_obs
+    with rec.span("outer", src="0"):
+        with rec.span("inner") as sp:
+            sp.set(items=3)
+        with rec.span("refusal") as sp:
+            sp.set_outcome("refused")
+    inner, refusal, outer = rec.events
+    assert outer["name"] == "outer" and outer["depth"] == 0
+    assert inner["parent_id"] == outer["span_id"] and inner["depth"] == 1
+    assert inner["attrs"]["items"] == 3
+    assert refusal["outcome"] == "refused"
+    assert outer["dur_s"] >= inner["dur_s"] >= 0
+    snap = reg.snapshot()
+    assert snap.get("spans_total", name="inner", outcome="ok") == 1
+    assert snap.get("spans_total", name="refusal", outcome="refused") == 1
+
+
+def test_span_records_error_and_reraises(fresh_obs):
+    _, rec = fresh_obs
+    with pytest.raises(RuntimeError, match="boom"):
+        with rec.span("failing"):
+            raise RuntimeError("boom")
+    (ev,) = rec.find("failing")
+    assert ev["outcome"] == "error"
+    assert ev["attrs"]["error"] == "RuntimeError"
+
+
+def test_span_is_noop_under_trace(fresh_obs):
+    """The runtime backstop of podlint PL006: entering a span inside a
+    jit trace records nothing (and crashes nothing)."""
+    _, rec = fresh_obs
+
+    @jax.jit
+    def f(x):
+        # the deliberate violation that pins the runtime backstop
+        with obs.span("traced-span"):  # podlint: ignore[PL006] -- see above
+            return x * 2
+
+    np.testing.assert_array_equal(np.asarray(f(jnp.arange(3))), [0, 2, 4])
+    assert rec.find("traced-span") == []
+
+
+def test_span_jsonl_dump(fresh_obs, tmp_path):
+    _, rec = fresh_obs
+    with rec.span("one", pod="3"):
+        pass
+    p = rec.dump_jsonl(tmp_path / "spans.jsonl")
+    lines = [json.loads(line) for line in p.read_text().splitlines()]
+    assert [e["name"] for e in lines] == ["one"]
+    assert lines[0]["attrs"]["pod"] == "3"
+
+
+# ---------------------------------------------------------------- jax bridge
+def test_bridge_installs_exactly_once(fresh_obs):
+    """repro.obs installed the bridge at import; every later install()
+    is a no-op — jax.monitoring has no unregister, so a second
+    subscription would double-count forever."""
+    assert jaxbridge.installed()
+    assert obs.install_jax_bridge() is False
+    assert obs.install_jax_bridge() is False
+    assert jaxbridge.registrations() == 1
+
+
+def test_bridge_and_retrace_guard_count_the_same_compiles(
+        fresh_obs, retrace_guard):
+    """Two independent subscribers, one event stream: the bridge's
+    always-on xla_compile_total must agree with the retrace_guard
+    fixture over a scope that definitely compiles."""
+    reg, _ = fresh_obs
+    with retrace_guard.budget(10):
+        jax.jit(lambda x: x * 3 + 1)(jnp.arange(11))  # fresh shape+fn
+    fresh = retrace_guard.compiles
+    assert fresh >= 1
+    assert reg.snapshot().get("xla_compile_total") == fresh
+
+
+# --------------------------------------------------------------------- drain
+def test_observe_total_is_monotone_with_reset_rule(fresh_obs):
+    reg, _ = fresh_obs
+    assert obs.drain.observe_total("led_total", {"pod": "0"}, 10) == 10
+    assert obs.drain.observe_total("led_total", {"pod": "0"}, 10) == 0
+    assert obs.drain.observe_total("led_total", {"pod": "0"}, 15) == 5
+    # the ledger shrank: a recycled slot restarted it — post-reset total
+    # counts as new growth, the counter never goes down
+    assert obs.drain.observe_total("led_total", {"pod": "0"}, 3) == 3
+    assert reg.snapshot().get("led_total", pod="0") == 18
+    # fresh registry => fresh baselines (no cross-test bleed)
+    reg2 = obs.reset_default_registry()
+    assert obs.drain.observe_total("led_total", {"pod": "0"}, 15) == 15
+    assert reg2.snapshot().get("led_total", pod="0") == 15
+
+
+def test_drain_pod_unifies_device_ledgers(fresh_obs):
+    import types
+    reg, _ = fresh_obs
+    state = types.SimpleNamespace(
+        drops_overflow=np.array([2, 0, 1], np.int32),
+        drops_unknown=np.array([4, 0, 0], np.int32),
+        items=np.array([10, 20, 0], np.int32),
+        accepts=np.array([3, 5, 0], np.int32),
+        resets=np.array([1, 0, 0], np.int32),
+        active=np.array([True, True, False]),
+    )
+    obs.drain.drain_pod(state, pod="7")
+    snap = reg.snapshot()
+    assert snap.get("drops_total", layer="pod", reason="overflow",
+                    pod="7") == 3
+    assert snap.get("drops_total", layer="pod", reason="unknown",
+                    pod="7") == 4
+    assert snap.get("pod_items_total", pod="7") == 30
+    assert snap.get("pod_accepts_total", pod="7") == 8
+    assert snap.get("pod_drift_resets_total", pod="7") == 1
+    assert snap.get("pod_active_sessions", pod="7") == 2
+    assert snap.get("pod_occupancy", pod="7") == pytest.approx(2 / 3)
+    # second drain with no growth adds nothing
+    obs.drain.drain_pod(state, pod="7")
+    assert reg.snapshot().get("drops_total", layer="pod",
+                              reason="overflow", pod="7") == 3
+
+
+def test_drop_ledgers_unify_across_all_three_layers(fresh_obs):
+    """The satellite: pod, buffer and router drops all land in ONE
+    ``drops_total{layer,reason}`` family, each as a monotone counter."""
+    from repro.ingest import IngestPipeline, TaggedBuffer
+    from repro.ingest.pipeline import PodRouter
+    reg, _ = fresh_obs
+    buf = TaggedBuffer(capacity=2, policy="drop-newest")
+    buf.put(np.array([5, 5, 5], np.int32), np.zeros((3, 2), np.float32))
+    obs.drain.drain_buffer(buf, pod="1")
+
+    class _Pod:  # buffer-mode pipeline shell; never run
+        class algo:
+            class f:
+                d = 2
+        chunk = 4
+    router = PodRouter({0: IngestPipeline(
+        pod=_Pod(), buffer=TaggedBuffer(capacity=8), batch=4)})
+    router.put(np.array([99], np.int32), np.zeros((1, 2), np.float32))
+    obs.drain.drain_router(router)
+
+    snap = reg.snapshot()
+    assert snap.get("drops_total", layer="buffer", reason="clipped",
+                    pod="1") == 1
+    assert snap.get("drops_total", layer="router", reason="unrouted",
+                    pod="-") == 1
+    fam = [f for f in snap.families if f["name"] == "drops_total"][0]
+    assert fam["labelnames"] == ["layer", "pod", "reason"]
+
+
+def test_backend_fallback_counted_per_degrade_warned_once(fresh_obs):
+    from repro.kernels.pod_step import ops
+    reg, _ = fresh_obs
+    ops._reset_warnings()
+    with pytest.warns(RuntimeWarning, match="no fused pod-step kernel"):
+        assert ops.resolve("pallas-interpret", object()) == "jnp"
+    import warnings as _w
+    with _w.catch_warnings():  # second degrade: no warning, still counted
+        _w.simplefilter("error")
+        assert ops.resolve("pallas-interpret", object()) == "jnp"
+    assert reg.snapshot().get(
+        "backend_fallback_total", kernel="pod_step",
+        **{"from": "pallas-interpret", "to": "jnp"}) == 2
+    ops._reset_warnings()
+
+
+# ------------------------------------------------------- instrumented stack
+def _fleet(S=8, d=4, batch=16, n_pods=2):
+    from repro.core.api import make
+    from repro.ingest import IngestPipeline, TaggedBuffer
+    from repro.ingest.pipeline import PodRouter
+    from repro.serve.summarize import SummarizerPod
+    algo = make("threesieves", d=d, K=4, T=16, eps=0.5)
+    pods = {i: SummarizerPod(algo, sessions=S, chunk=batch)
+            for i in range(n_pods)}
+    pipes = {i: IngestPipeline(pod=p, buffer=TaggedBuffer(4096), batch=batch)
+             for i, p in pods.items()}
+    router = PodRouter(pipes)
+    states = {i: p.init() for i, p in pods.items()}
+    return pods, pipes, router, states
+
+
+def test_pipeline_records_at_sync_boundary_without_retracing(
+        fresh_obs, retrace_guard):
+    """The tentpole contract: an instrumented ingest run records its
+    boundary metrics + device-ledger drain with ZERO fresh compiles
+    beyond warmup — telemetry never touches the compiled program."""
+    from repro.core.api import make
+    from repro.ingest import IngestPipeline
+    from repro.serve.summarize import SummarizerPod
+    reg, _ = fresh_obs
+    algo = make("threesieves", d=4, K=4, T=16, eps=0.5)
+    pod = SummarizerPod(algo, sessions=4, chunk=16)
+    state = pod.init()
+    admit = jax.jit(pod.admit)
+    for sid in range(3):
+        state, _, _ = admit(state, sid)
+    rng = np.random.default_rng(0)
+
+    def batches(n):
+        return [(rng.integers(0, 3, 16).astype(np.int32),
+                 rng.normal(size=(16, 4)).astype(np.float32))
+                for _ in range(n)]
+
+    warm = IngestPipeline(pod=pod, source=iter(batches(1)), batch=16)
+    state, _ = warm.run(state)
+    with retrace_guard.budget(0):
+        pipe = IngestPipeline(pod=pod, source=iter(batches(5)), batch=16,
+                              pod_id="9")
+        state, stats = pipe.run(state)
+    assert stats["items"] == 80
+    snap = reg.snapshot()
+    assert snap.get("ingest_items_total", pod="9") == 80
+    assert snap.get("ingest_batches_total", pod="9") == 5
+    assert snap.get("pod_items_total", pod="9") == float(
+        np.asarray(state.items).sum())
+    assert snap.get("drops_total", layer="pod", reason="overflow",
+                    pod="9") == 0.0
+    assert snap.get("pod_active_sessions", pod="9") == 3
+
+
+def test_pipeline_metrics_null_disables(fresh_obs):
+    from repro.core.api import make
+    from repro.ingest import IngestPipeline
+    from repro.serve.summarize import SummarizerPod
+    reg, _ = fresh_obs
+    algo = make("threesieves", d=4, K=4, T=16, eps=0.5)
+    pod = SummarizerPod(algo, sessions=4, chunk=16)
+    state = pod.init()
+    state, _, _ = pod.admit(state, 0)
+    sids = np.zeros((16,), np.int32)
+    X = np.ones((16, 4), np.float32)
+    pipe = IngestPipeline(pod=pod, source=iter([(sids, X)]), batch=16,
+                          metrics=obs.NULL)
+    state, stats = pipe.run(state)
+    assert stats["items"] == 16
+    assert reg.snapshot().get("ingest_items_total", pod="0") is None
+
+
+def test_handoff_refusal_leaves_refused_span_with_no_phases(fresh_obs):
+    from repro.serve.autoscale import PodAutoscaler
+    reg, rec = fresh_obs
+    pods, pipes, router, states = _fleet()
+    scaler = PodAutoscaler(router, pods)
+    states, rep = scaler.handoff(states, 0, 0, [1])
+    assert not rep.ok and rep.reason == "src == dst"
+    assert [e["name"] for e in rec.events] == ["handoff"]
+    (ev,) = rec.find("handoff")
+    assert ev["outcome"] == "refused"
+    assert ev["attrs"]["reason"] == "src == dst"
+    assert reg.snapshot().get("handoffs_total", outcome="refused") == 1
+    assert rec.find("quiesce") == []
+
+
+def test_handoff_success_leaves_the_full_phase_tree(fresh_obs):
+    from repro.serve.autoscale import PodAutoscaler
+    reg, rec = fresh_obs
+    pods, pipes, router, states = _fleet()
+    admit = jax.jit(pods[0].admit)
+    for sid in range(4):
+        states[0], _, _ = admit(states[0], sid)
+    router.assign([0, 1, 2, 3], 0)
+    rec.clear()
+    scaler = PodAutoscaler(router, pods)
+    states, rep = scaler.handoff(states, 0, 1, [1, 2])
+    assert rep.ok and rep.moved == [1, 2]
+    (parent,) = rec.find("handoff")
+    assert parent["outcome"] == "ok"
+    phases = [e for e in rec.events if e["parent_id"] == parent["span_id"]]
+    assert [e["name"] for e in phases] == [
+        "quiesce", "snapshot", "restore", "evict", "flip"]
+    assert all(e["depth"] == 1 and e["outcome"] == "ok" for e in phases)
+    snap = reg.snapshot()
+    assert snap.get("handoffs_total", outcome="ok") == 1
+    assert snap.get("sessions_migrated_total") == 2
+    # the handoff edge drained both pods' ledgers
+    assert snap.get("pod_active_sessions", pod="0") == 2
+    assert snap.get("pod_active_sessions", pod="1") == 2
+
+
+def test_ckpt_save_restore_spans_and_counters(fresh_obs, tmp_path):
+    from repro.ckpt import CheckpointStore
+    reg, rec = fresh_obs
+    store = CheckpointStore(tmp_path, keep=2)
+    tree = {"a": jnp.arange(8), "b": jnp.ones((2, 3))}
+    store.save(3, tree, {"note": "x"})
+    store.save_async(4, tree)
+    store.wait()
+    like = jax.eval_shape(lambda: tree)
+    back, extra = store.load(3, like)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.arange(8))
+    assert [e["outcome"] for e in rec.find("ckpt_save")] == ["ok", "ok"]
+    assert rec.find("ckpt_write")  # the async bg write span
+    assert rec.find("ckpt_restore")
+    snap = reg.snapshot()
+    assert snap.get("ckpt_saves_total", mode="sync") == 1
+    assert snap.get("ckpt_saves_total", mode="async") == 1
+    assert snap.get("ckpt_saved_bytes_total") > 0
+
+
+def test_drift_reset_span_in_serve(fresh_obs):
+    from repro.core.api import make
+    from repro.ingest import IngestPipeline
+    from repro.serve.summarize import SummarizerPod
+    _, rec = fresh_obs
+    algo = make("threesieves", d=4, K=4, T=16, eps=0.5)
+    pod = SummarizerPod(algo, sessions=4, chunk=16)
+    state = pod.init()
+    state, _, _ = pod.admit(state, 0)
+    sids = np.zeros((16,), np.int32)
+    X = np.ones((16, 4), np.float32)
+    pipe = IngestPipeline(pod=pod, source=iter([(sids, X)] * 4), batch=16)
+    state, stats = pod.serve(state, pipe, drift_every=2)
+    assert stats["batches"] == 4
+    assert len(rec.find("drift_reset")) >= 1
+
+
+def test_pod_drain_metrics_delegates(fresh_obs):
+    from repro.core.api import make
+    from repro.serve.summarize import SummarizerPod
+    reg, _ = fresh_obs
+    algo = make("threesieves", d=4, K=4, T=16, eps=0.5)
+    pod = SummarizerPod(algo, sessions=4, chunk=16)
+    state = pod.init()
+    state, _, _ = pod.admit(state, 42)
+    pod.drain_metrics(state, pod="2")
+    assert reg.snapshot().get("pod_active_sessions", pod="2") == 1

@@ -18,7 +18,7 @@ from tools.podlint.cli import main as podlint_main
 from tools.podlint.config import Config, ConfigError, load_config
 
 TESTDATA = REPO / "tools" / "podlint" / "testdata"
-ALL_CODES = ("PL001", "PL002", "PL003", "PL004", "PL005")
+ALL_CODES = ("PL001", "PL002", "PL003", "PL004", "PL005", "PL006")
 
 
 def _cfg(**kw):
@@ -36,7 +36,7 @@ def _lint_file(path, select=None, cfg=None):
 
 
 # ------------------------------------------------------------ rule catalog
-def test_registry_has_the_five_rules():
+def test_registry_has_the_six_rules():
     assert set(REGISTRY) == set(ALL_CODES)
     for code, cls in REGISTRY.items():
         assert cls.code == code and cls.summary
@@ -75,6 +75,22 @@ def test_pl003_flags_direct_and_named_donation():
     assert len(findings) == 2
     assert {"advance" in f.message or "jit" in f.message
             for f in findings} == {True}
+
+
+def test_pl006_flags_both_counter_and_span_but_not_at_set():
+    """Metric .inc AND span entry fire in the bad fixture; the jnp
+    ``x.at[i].set(v)`` idiom must never trip the rule (the reason gauge
+    ``set`` is excluded from the default record_methods)."""
+    findings, _ = _lint_file(TESTDATA / "pl006_bad.py", select=["PL006"])
+    assert any(".inc(...)" in f.message or "inc(...)" in f.message
+               for f in findings)
+    assert any("span" in f.message for f in findings)
+    src = ("import jax\nimport jax.numpy as jnp\n"
+           "def step(state, i, v):\n"
+           "    return state.at[i].set(v)\n"
+           "stepped = jax.jit(step)\n")
+    quiet, _ = lint_source(src, "x.py", _cfg(), select={"PL006"})
+    assert not quiet
 
 
 # ------------------------------------------------------------- suppressions

@@ -493,3 +493,64 @@ class TracerBranch(Rule):
             if isinstance(n, ast.Name) and n.id in tainted:
                 return f"`{n.id}` (assigned from jnp ops)"
         return None
+
+
+# ---------------------------------------------------------------------------
+# PL006 — metric recording / span entry in traced code
+# ---------------------------------------------------------------------------
+
+
+@register
+class MetricInTrace(Rule):
+    """``counter.inc()`` / ``hist.observe()`` / ``obs.span(...)`` inside
+    traced functions.
+
+    Telemetry executed under a trace is the worst kind of wrong: it does
+    not crash.  The recording call runs once per *compile*, not per
+    step — the counter undercounts forever, and a span's duration
+    measures tracing time, then never fires again.  The rule of
+    DESIGN.md §13 is "record at host-sync boundaries only": drains and
+    spans belong to the host control plane (``pipeline.run``'s tail, an
+    autoscaler tick, a handoff edge), never to the jitted program.
+    ``obs.spans`` also no-ops under a trace at runtime; this rule is the
+    static gate so the dead call never ships.
+
+    ``set`` is deliberately NOT in ``record_methods``: flagging it would
+    false-positive on every ``x.at[i].set(v)`` in traced code.  Gauge
+    ``.set`` in a trace is still caught in review — it is rare; the
+    at[].set idiom is everywhere.
+    """
+
+    code = "PL006"
+    summary = "metric recording (.inc/.dec/.observe) or span entry in traced code"
+    defaults: ClassVar[Dict[str, object]] = {
+        "record_methods": ["inc", "dec", "observe"],
+        "span_callables": ["span"],
+    }
+
+    def check(self, model, cfg):
+        record = set(cfg["record_methods"])
+        spans = set(cfg["span_callables"])
+        for info in model.traced_functions():
+            for node in HostSyncInHotPath._own_nodes(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                name, last = callee_name(node)
+                if last is None:
+                    continue
+                if last in record and isinstance(node.func, ast.Attribute):
+                    yield self.finding(
+                        model, node,
+                        f"metric-in-trace: {name}(...) inside traced "
+                        f"function `{info.qualname}` ({info.traced_via}) "
+                        f"— it records once per compile, not per step "
+                        f"(keep counters as traced state and drain them "
+                        f"at a host-sync boundary)")
+                elif last in spans:
+                    yield self.finding(
+                        model, node,
+                        f"metric-in-trace: span entry {name}(...) inside "
+                        f"traced function `{info.qualname}` "
+                        f"({info.traced_via}) — a span under a trace "
+                        f"times the tracer, then never fires again "
+                        f"(wrap the host call site instead)")

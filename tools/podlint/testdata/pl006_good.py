@@ -1,0 +1,27 @@
+"""PL006 fixture, repaired: the traced step carries its counts as
+traced state (a device counter leaf); the host driver drains it into
+the registry and wraps the *host* call site in a span — record at
+host-sync boundaries only (DESIGN.md §13)."""
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+
+
+def step(state, count, x):
+    gain = jnp.dot(state, x)
+    take = gain > 0
+    # device-side ledger: counting stays inside the compiled program
+    return state + jnp.where(take, x, 0.0), count + take.astype(jnp.int32)
+
+
+def run(state, X):
+    stepped = jax.jit(step)
+    count = jnp.zeros((), jnp.int32)
+    with obs.span("run", batches=len(X)):  # host span around the loop
+        for x in X:
+            state, count = stepped(state, count, x)
+        jax.block_until_ready(state)
+    # the sync boundary: drain the device ledger into a host counter
+    obs.drain.observe_total("fixture_items_total", {}, int(count))
+    return state
