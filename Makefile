@@ -3,8 +3,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify lint analyze bench-oracle bench-serve bench-ingest \
-	bench-autoscale bench-podstep bench-obs bench-gate bench
+.PHONY: verify verify-lockdep lint analyze bench-oracle bench-serve \
+	bench-ingest bench-autoscale bench-podstep bench-obs bench-gate bench
 
 # tier-1: the gate every PR must keep green.  JUNIT=<path> additionally
 # writes a junit XML report; OBS_DUMP=<dir> dumps the suite's telemetry
@@ -22,11 +22,22 @@ lint:
 	ruff check src tests benchmarks tools
 	python -m tools.podlint src tests benchmarks
 
-# the full analysis gate: podlint + retrace_guard self-tests, then the
-# tree scan with a report file (CI uploads podlint-report.txt)
+# the full analysis gate: podlint + retrace_guard + lockdep self-tests,
+# then the tree scan with a report file and the acquired-before graph
+# artifact (CI uploads podlint-report.txt + lockgraph.json/.dot)
 analyze:
-	python -m pytest -q tests/test_podlint.py tests/test_retrace_guard.py
-	python -m tools.podlint src tests benchmarks --report podlint-report.txt
+	python -m pytest -q tests/test_podlint.py tests/test_retrace_guard.py \
+		tests/test_lockdep.py
+	python -m tools.podlint src tests benchmarks \
+		--report podlint-report.txt --lock-graph lockgraph
+
+# tier-1's concurrency-heavy suites under the runtime lock-order
+# sanitizer: every lock built through repro.concurrency.make_lock
+# records acquired-before edges and raises on the first inversion —
+# a dynamic proof the static lockgraph is honest (DESIGN.md §14)
+verify-lockdep:
+	REPRO_LOCKDEP=1 python -m pytest -x -q tests/test_ingest.py \
+		tests/test_autoscale.py tests/test_obs.py
 
 # GainOracle backend A/B sweep -> BENCH_oracle.json
 bench-oracle:

@@ -44,6 +44,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.concurrency import make_lock
+
 POLICIES = ("block", "drop-newest", "drop-oldest")
 PAD_SID = -1  # the pod's queue-padding sentinel
 
@@ -63,7 +65,7 @@ class TaggedBuffer:
         self._size = 0
         self._quiesced: set = set()  # sids parked: fed, never drained
         self._closed = False
-        self._lock = threading.Lock()
+        self._lock = make_lock("TaggedBuffer._lock")
         self._not_full = threading.Condition(self._lock)
         self._not_empty = threading.Condition(self._lock)
         self.drops: Dict[int, int] = {}  # sid -> items clipped

@@ -51,6 +51,7 @@ import numpy as np
 
 from repro import obs
 from repro.compat import hashable_lru
+from repro.concurrency import make_lock
 
 from .buffer import PAD_SID, TaggedBuffer
 from .sources import Source, TaggedBatch
@@ -316,7 +317,7 @@ class PodRouter:
                     f"pod {pid}: PodRouter needs buffer-mode pipelines")
             pipe.pod_id = pid  # every pipe's metrics carry its fleet id
         self._table: Dict[int, int] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("PodRouter._lock")
         self._feeders = []
         self.drops_unrouted: Dict[int, int] = {}
 

@@ -24,13 +24,13 @@ tests/test_obs.py).
 """
 from __future__ import annotations
 
-import threading
+from repro.concurrency import make_lock
 
 from .registry import get_registry
 
 COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
 
-_install_lock = threading.Lock()
+_install_lock = make_lock("jaxbridge._install_lock")
 _installed = False
 _registrations = 0  # how many times listeners were REGISTERED (tests: == 1)
 

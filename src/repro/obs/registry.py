@@ -32,8 +32,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import threading
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.concurrency import make_lock
 
 # Prometheus' default duration buckets, in seconds — control-plane spans
 # (admits, handoffs, checkpoint writes) land mid-range by design.
@@ -124,7 +125,7 @@ class MetricFamily:
         self.help = help
         self.labelnames = tuple(labelnames)
         self.buckets = tuple(buckets) if kind == "histogram" else ()
-        self._lock = threading.Lock()
+        self._lock = make_lock("MetricFamily._lock")
         self._children: Dict[Tuple[str, ...], object] = {}
 
     def signature(self) -> Tuple:
@@ -240,7 +241,7 @@ class MetricsRegistry:
 
     def __init__(self):
         self._families: Dict[str, MetricFamily] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("MetricsRegistry._lock")
         # cumulative-counter drain baselines (repro.obs.drain) live on
         # the registry so a fresh registry starts with fresh baselines
         self.drain_baselines: Dict[Tuple, float] = {}

@@ -40,6 +40,8 @@ import time
 from pathlib import Path
 from typing import Dict, List, Optional
 
+from repro.concurrency import make_lock
+
 from .registry import get_registry
 
 try:  # the runtime "am I inside a trace?" probe; absent on exotic jax
@@ -86,7 +88,7 @@ class SpanRecorder:
         self.events: List[dict] = []
         self._path = Path(path) if path else None
         self._fh = None
-        self._lock = threading.Lock()
+        self._lock = make_lock("SpanRecorder._lock")
         self._local = threading.local()
         self._next_id = 0
         self._registry = registry

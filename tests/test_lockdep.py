@@ -1,0 +1,251 @@
+"""Lockdep runtime sanitizer tests (repro.concurrency, DESIGN.md §14).
+
+The contract under test:
+
+  * ``make_lock`` is a plain ``threading.Lock`` unless REPRO_LOCKDEP=1;
+  * an ABBA inversion raises :class:`LockOrderError` in exactly one of
+    the two threads *before* either can wedge — the raiser's context
+    manager unwinds, releasing its lock, so the other thread finishes;
+  * consistent global order never raises;
+  * name granularity: nesting two same-named instances raises, and a
+    non-reentrant lock re-acquired on its own thread raises instead of
+    self-deadlocking (``LockdepRLock`` re-enters fine);
+  * ``threading.Condition`` over a lockdep lock works (wait releases
+    through the wrapper);
+  * and the headline invariant: every edge the sanitizer OBSERVES while
+    driving the real router/buffer stack is PREDICTED by podlint's
+    static acquired-before graph (observed ⊆ static).
+
+No jax import on any hot path here; the agreement test builds pipelines
+around a dummy pod object.
+"""
+import pathlib
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))  # tools/ for the agreement test
+
+from repro.concurrency import (
+    LockdepLock,
+    LockdepRLock,
+    LockOrderError,
+    edges,
+    graph_snapshot,
+    make_lock,
+    make_rlock,
+    reset,
+)
+
+JOIN_TIMEOUT = 30.0
+
+
+@pytest.fixture(autouse=True)
+def _fresh_graph(monkeypatch):
+    """Every test starts lockdep-enabled with an empty order graph."""
+    monkeypatch.setenv("REPRO_LOCKDEP", "1")
+    reset()
+    yield
+    reset()
+
+
+# ------------------------------------------------------------- factories
+def test_factories_return_plain_locks_when_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_LOCKDEP", raising=False)
+    assert not isinstance(make_lock("X"), LockdepLock)
+    assert not isinstance(make_rlock("X"), LockdepLock)
+    monkeypatch.setenv("REPRO_LOCKDEP", "0")
+    assert not isinstance(make_lock("X"), LockdepLock)
+
+
+def test_factories_instrument_under_the_flag():
+    lk = make_lock("A.lock")
+    assert isinstance(lk, LockdepLock)
+    assert isinstance(make_rlock("B.lock"), LockdepRLock)
+    with lk:
+        assert lk._is_owned() and lk.locked()
+    assert not lk._is_owned()
+
+
+# ----------------------------------------------------------- order checks
+def test_consistent_order_never_raises():
+    a, b = make_lock("A.lock"), make_lock("B.lock")
+    done = []
+
+    def worker():
+        for _ in range(50):
+            with a:
+                with b:
+                    pass
+        done.append(1)
+
+    ts = [threading.Thread(target=worker) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=JOIN_TIMEOUT)
+        assert not t.is_alive()
+    assert len(done) == 2
+    assert ("A.lock", "B.lock") in edges()
+
+
+def test_abba_raises_in_one_thread_and_never_wedges():
+    """The deadlock class, reproduced: whichever thread closes the
+    cycle raises BEFORE blocking; its `with` unwinds and releases, so
+    the other thread completes.  No wedge, exactly one error."""
+    a, b = make_lock("A.lock"), make_lock("B.lock")
+    barrier = threading.Barrier(2, timeout=JOIN_TIMEOUT)
+    errors, clean = [], []
+
+    def ab():
+        with a:
+            barrier.wait()
+            try:
+                with b:
+                    clean.append("ab")
+            except LockOrderError as e:
+                errors.append(e)
+
+    def ba():
+        with b:
+            barrier.wait()
+            try:
+                with a:
+                    clean.append("ba")
+            except LockOrderError as e:
+                errors.append(e)
+
+    ts = [threading.Thread(target=ab), threading.Thread(target=ba)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=JOIN_TIMEOUT)
+        assert not t.is_alive(), "lockdep failed: the ABBA pair wedged"
+    assert len(errors) == 1, f"expected exactly one inversion: {errors}"
+    assert len(clean) == 1
+    assert "lock-order inversion" in str(errors[0])
+    # both witness sites are named in the message
+    assert "A.lock" in str(errors[0]) and "B.lock" in str(errors[0])
+
+
+def test_inversion_detected_without_the_adverse_interleaving():
+    """Sequential — no second thread, no actual deadlock possible —
+    but the order violation still raises on first sight."""
+    a, b = make_lock("A.lock"), make_lock("B.lock")
+    with a:
+        with b:
+            pass
+    with pytest.raises(LockOrderError):
+        with b:
+            with a:
+                pass
+
+
+def test_same_name_two_instances_nesting_raises():
+    l1, l2 = LockdepLock("TaggedBuffer._lock"), LockdepLock("TaggedBuffer._lock")
+    with l1:
+        with pytest.raises(LockOrderError, match="same-name"):
+            l2.acquire()
+
+
+def test_self_reacquire_raises_instead_of_deadlocking():
+    lk = make_lock("A.lock")
+    with lk:
+        with pytest.raises(LockOrderError, match="self-deadlock"):
+            lk.acquire()
+    # the failed acquire must not have corrupted the held stack
+    with lk:
+        pass
+
+
+def test_rlock_reenters_and_releases_cleanly():
+    rl = make_rlock("R.lock")
+    with rl:
+        with rl:
+            assert rl._is_owned()
+        assert rl._is_owned()
+    assert not rl._is_owned()
+
+
+def test_trylock_neither_records_nor_raises():
+    a, b = make_lock("A.lock"), make_lock("B.lock")
+    with a:
+        with b:
+            pass
+    with b:
+        assert a.acquire(False)  # would be an inversion if blocking
+        a.release()
+    assert ("B.lock", "A.lock") not in edges()
+
+
+# ------------------------------------------------------------- condition
+def test_condition_over_lockdep_lock_wait_notify():
+    lk = make_lock("C.lock")
+    cond = threading.Condition(lk)
+    ready = []
+
+    def consumer():
+        with cond:
+            while not ready:
+                cond.wait(timeout=JOIN_TIMEOUT)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    with cond:
+        ready.append(1)
+        cond.notify()
+    t.join(timeout=JOIN_TIMEOUT)
+    assert not t.is_alive()
+    assert not lk._is_owned()
+
+
+# ------------------------------------------------------------- the graph
+def test_edges_snapshot_and_reset():
+    a, b = make_lock("A.lock"), make_lock("B.lock")
+    with a:
+        with b:
+            pass
+    assert edges() == {("A.lock", "B.lock")}
+    snap = graph_snapshot()
+    assert snap["locks"] == ["A.lock", "B.lock"]
+    assert snap["edges"][0]["src"] == "A.lock"
+    assert snap["edges"][0]["dst"] == "B.lock"
+    reset()
+    assert edges() == set()
+
+
+# ------------------------------------- static ⊇ dynamic (the acceptance)
+def test_observed_edges_are_a_subset_of_the_static_graph():
+    """Drive the real router/buffer stack under lockdep and require
+    every observed acquired-before edge to appear in podlint's static
+    graph: the analyser must never be blind to an order the code
+    actually executes."""
+    from repro.ingest.buffer import TaggedBuffer
+    from repro.ingest.pipeline import IngestPipeline, PodRouter
+
+    router = PodRouter(pipelines={
+        0: IngestPipeline(object(), buffer=TaggedBuffer(8), batch=4),
+        1: IngestPipeline(object(), buffer=TaggedBuffer(8), batch=4)})
+    assert isinstance(router._lock, LockdepLock)  # wiring, not a stub
+    router.assign([1, 2], 0)
+    router.put([1, 1, 2], np.ones((3, 3), np.float32))
+    router.quiesce([1])
+    router.migrate([1], 1)
+    router.release([1])
+    router.unassign([2])
+    dyn = edges()
+    assert ("PodRouter._lock", "TaggedBuffer._lock") in dyn
+
+    from tools.podlint import lint_paths
+    res = lint_paths(["src"], config_path=str(REPO / "podlint.toml"),
+                     root=str(REPO), want_lock_graph=True)
+    assert not res.errors
+    static = {(e["src"], e["dst"]) for e in res.lock_graph["edges"]}
+    missing = dyn - static
+    assert not missing, (
+        f"runtime observed acquired-before edges the static graph "
+        f"misses: {sorted(missing)}")
+    assert not res.lock_graph["cycles"]

@@ -75,12 +75,20 @@ class ModuleModel:
         self.jnp_aliases: Set[str] = set()
         self.np_aliases: Set[str] = set()
         self.jax_aliases: Set[str] = set()
+        # `from pkg.mod import name as alias` -> alias: (pkg.mod, name);
+        # `import pkg.mod as alias` -> alias: pkg.mod.  Fuel for the
+        # cross-module resolver (crossmodule.RepoModel).
+        self.imported_names: Dict[str, Tuple[str, str]] = {}
+        self.module_aliases: Dict[str, str] = {}
         self.functions: Dict[int, FunctionInfo] = {}  # id(node) -> info
         self._by_name: Dict[str, List[FunctionInfo]] = {}
+        # Set by crossmodule.RepoModel when this model is linted as part
+        # of a whole-repo pass; interprocedural rules no-op when None.
+        self.repo = None
         self._collect_imports()
         self._collect_functions()
         self._seed_traced(traced_globs)
-        self._propagate_traced()
+        self.propagate_traced()
 
     # ------------------------------------------------------------ imports
     def _collect_imports(self) -> None:
@@ -88,6 +96,7 @@ class ModuleModel:
             if isinstance(node, ast.Import):
                 for a in node.names:
                     alias = a.asname or a.name.split(".")[0]
+                    self.module_aliases[alias] = a.name
                     if a.name == "jax.numpy":
                         self.jnp_aliases.add(a.asname or "jax.numpy")
                     elif a.name == "numpy":
@@ -95,6 +104,10 @@ class ModuleModel:
                     elif a.name == "jax" or a.name.startswith("jax."):
                         self.jax_aliases.add(alias)
             elif isinstance(node, ast.ImportFrom):
+                mod = ("." * node.level) + (node.module or "")
+                for a in node.names:
+                    if a.name != "*":
+                        self.imported_names[a.asname or a.name] = (mod, a.name)
                 if node.module == "jax":
                     for a in node.names:
                         if a.name == "numpy":
@@ -159,7 +172,9 @@ class ModuleModel:
                 for info in self._by_name.get(ref, []):
                     info.mark(f"passed to {callee}")
 
-    def _propagate_traced(self) -> None:
+    def propagate_traced(self) -> None:
+        """Intra-module traced closure; monotone and idempotent, so the
+        repo-wide pass can re-run it after planting cross-module marks."""
         changed = True
         while changed:
             changed = False

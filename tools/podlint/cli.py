@@ -36,6 +36,18 @@ def _parser() -> argparse.ArgumentParser:
     p.add_argument("--report", default=None, metavar="FILE",
                    help="also write the findings + summary to FILE "
                         "(the CI artifact)")
+    p.add_argument("--format", default="text", choices=("text", "sarif"),
+                   help="output format: human text (default) or SARIF "
+                        "2.1.0 for GitHub code-scanning annotations")
+    p.add_argument("--changed-only", action="store_true",
+                   help="report only files changed vs --diff-base (git "
+                        "diff + untracked); the whole scan set is still "
+                        "parsed so interprocedural facts stay sound")
+    p.add_argument("--diff-base", default="HEAD", metavar="REF",
+                   help="base ref for --changed-only (default: HEAD)")
+    p.add_argument("--lock-graph", default=None, metavar="PREFIX",
+                   help="write the acquired-before graph artifact to "
+                        "PREFIX.json and PREFIX.dot (see DESIGN.md §14)")
     p.add_argument("--list-rules", action="store_true",
                    help="print the rule catalog and exit")
     return p
@@ -54,12 +66,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     split = lambda s: [c.strip() for c in s.split(",") if c.strip()]
     result = lint_paths(
         args.paths, config_path=config, root=args.root,
-        select=split(args.select), ignore=split(args.ignore))
+        select=split(args.select), ignore=split(args.ignore),
+        changed_only=args.changed_only, diff_base=args.diff_base,
+        want_lock_graph=args.lock_graph is not None)
     if result.errors:
         for e in result.errors:
             print(f"podlint: error: {e}", file=sys.stderr)
         return 2
-    print(emit(result, report_path=args.report,
+    if args.lock_graph is not None:
+        import json
+        with open(args.lock_graph + ".json", "w", encoding="utf-8") as fh:
+            json.dump(result.lock_graph, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        with open(args.lock_graph + ".dot", "w", encoding="utf-8") as fh:
+            fh.write(result.lock_graph_dot)
+    print(emit(result, report_path=args.report, fmt=args.format,
                command=" ".join(args.paths)))
     return 1 if result.findings else 0
 

@@ -89,6 +89,10 @@ def _parse_value(v: str, lineno: int):
 class Config:
     exclude: List[str]
     traced_functions: List[str]
+    # negative seeds for the *cross-module* traced propagation: host
+    # dispatchers that run at trace time by design (backend resolvers)
+    # and must not taint their callees as traced code
+    untraced_functions: List[str]
     rules: Dict[str, dict]  # code -> merged knobs (incl. include/exclude)
 
     def rule_cfg(self, code: str, defaults: Dict[str, object]) -> dict:
@@ -128,7 +132,8 @@ def load_config(path: Optional[str], known_codes) -> Config:
                 raise
             raise ConfigError(f"cannot parse {path}: {e}") from e
     top = data.get("podlint", {})
-    unknown = set(top) - {"exclude", "traced_functions"}
+    unknown = set(top) - {"exclude", "traced_functions",
+                          "untraced_functions"}
     if unknown:
         raise ConfigError(f"[podlint]: unknown keys {sorted(unknown)}")
     rules = data.get("rule", {})
@@ -140,5 +145,6 @@ def load_config(path: Optional[str], known_codes) -> Config:
     return Config(
         exclude=list(top.get("exclude", [])) + DEFAULT_EXCLUDE,
         traced_functions=list(top.get("traced_functions", [])),
+        untraced_functions=list(top.get("untraced_functions", [])),
         rules={code: dict(tbl) for code, tbl in rules.items()},
     )

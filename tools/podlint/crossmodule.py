@@ -1,0 +1,1016 @@
+"""Whole-repo interprocedural analysis: :class:`RepoModel`.
+
+The per-module :class:`~tools.podlint.analysis.ModuleModel`s are linked
+into one repo-wide view with four layers, each feeding the next:
+
+1. **Facts** — every class (methods, attribute type annotations,
+   ``self.x = ClassName(...)`` assignments) and every lock creation
+   site.  A lock's graph key is the string constant passed to
+   ``make_lock("PodRouter._lock")`` when the code uses the lockdep
+   factory, else ``ClassName.attr`` / ``module.name`` — which is why the
+   static graph and the runtime lockdep graph agree on spelling.
+   ``threading.Condition(self._lock)`` aliases to the underlying lock.
+
+2. **Resolution** — a flow-insensitive type narrowing over attribute
+   chains (``self.pipelines[pid].buffer.put`` → field annotations →
+   ``Dict[int, IngestPipeline]`` → ``Optional[TaggedBuffer]`` →
+   ``TaggedBuffer.put``).  A chain typed to a *non-repo* class resolves
+   to nothing (``self._table.get`` on a ``Dict`` never resolves to
+   ``TaggedBuffer.get``); only a genuinely unknown receiver falls back
+   to name-based candidates.  Bare names resolve to local functions —
+   including closures, which is what fixes PL002's nested-def blind
+   spot — then to ``from x import y`` targets.
+
+3. **Summaries** — per function, a fixpoint over the call graph:
+   *blocking* (contains, or transitively calls something that contains,
+   a blocking primitive — ``put``/``recv``/``join``/``wait``/...) and
+   *acquires* (the set of lock keys the function may take).  Each fact
+   carries a human-readable witness chain.
+
+4. **Regions** — a lexical walk of every function tracking the held
+   lock stack: nested ``with`` acquisitions and calls into
+   lock-acquiring functions yield acquired-before edges (PL007); calls
+   into transitively-blocking repo functions while holding a lock yield
+   PL008 findings.  Raw blocking primitives under a lexical lock stay
+   PL002's report (one finding per defect, two rules per class).
+
+Division of labour with the runtime half: this module predicts the
+acquired-before graph; ``src/repro/concurrency/lockdep.py`` observes it
+under ``REPRO_LOCKDEP=1``.  tests/test_lockdep.py asserts observed ⊆
+predicted.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+from pathlib import PurePosixPath
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from .analysis import FunctionInfo, ModuleModel, dotted_name
+
+# Defaults shared with the rule classes (rules.py imports these; this
+# module must not import rules.py back).
+BLOCKING_DEFAULT = [
+    "put", "block_until_ready", "recv", "recv_into", "send", "sendall",
+    "accept", "connect", "join", "sleep", "device_get", "wait", "wait_for",
+]
+PL007_DEFAULTS: Dict[str, object] = {"lock_glob": "*lock*"}
+PL008_DEFAULTS: Dict[str, object] = {
+    "lock_glob": "*lock*", "blocking": list(BLOCKING_DEFAULT)}
+
+_LOCK_FACTORIES = {"Lock", "RLock"}
+_NAMED_LOCK_FACTORIES = {"make_lock", "make_rlock",
+                         "LockdepLock", "LockdepRLock"}
+
+# type-lattice sentinels; classes are ("class", ClassFacts), containers
+# wrap their element type
+OTHER = ("other",)      # known non-repo type: never resolve through it
+UNKNOWN = ("unknown",)  # no information: name-based fallback allowed
+
+
+def donated_positions(call: ast.Call) -> Optional[Set[int]]:
+    """``jax.jit(..., donate_argnums=...)`` -> donated positions, or
+    None when ``call`` is not a donating-jit expression."""
+    name = dotted_name(call.func)
+    if not name or name.split(".")[-1] not in ("jit", "pjit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg not in ("donate_argnums", "donate_argnames"):
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return {v.value}
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = {e.value for e in v.elts
+                   if isinstance(e, ast.Constant)
+                   and isinstance(e.value, int)}
+            return out or {0}
+        return {0}  # unresolvable expression: assume arg 0
+    return None
+
+
+def own_nodes(fn: ast.AST) -> Iterator[ast.AST]:
+    """All descendants of a function body, excluding nested function
+    scopes (those are analysed as functions of their own)."""
+    def walk(node: ast.AST) -> Iterator[ast.AST]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda, ast.ClassDef)):
+                continue
+            yield child
+            yield from walk(child)
+
+    for stmt in fn.body:
+        yield stmt
+        yield from walk(stmt)
+
+
+def _call_last(call: ast.Call) -> Tuple[Optional[str], Optional[str]]:
+    name = dotted_name(call.func)
+    if name:
+        return name, name.split(".")[-1]
+    if isinstance(call.func, ast.Attribute):
+        return f"...{call.func.attr}", call.func.attr
+    return None, None
+
+
+@dataclasses.dataclass
+class LockInfo:
+    key: str    # graph node id, e.g. "TaggedBuffer._lock"
+    path: str
+    line: int
+
+
+@dataclasses.dataclass
+class ClassFacts:
+    name: str
+    model: ModuleModel
+    node: ast.ClassDef
+    methods: Dict[str, FunctionInfo]
+    attr_ann: Dict[str, ast.AST]    # attr -> annotation expression
+    attr_call: Dict[str, ast.Call]  # attr -> `self.attr = Call(...)` value
+    locks: Dict[str, LockInfo]      # attr -> lock identity
+    cond_alias: Dict[str, str]      # condition attr -> lock attr it wraps
+
+
+@dataclasses.dataclass
+class Edge:
+    src: str
+    dst: str
+    path: str
+    line: int
+    via: str
+
+
+@dataclasses.dataclass
+class RegionEvent:
+    kind: str          # "blocking" | "wait-extra"
+    node: ast.AST
+    held: List[str]
+    target: str        # callee qualname (blocking) or condition key (wait)
+    chain: str         # witness chain for the blocking fact
+
+
+class RepoModel:
+    """The linked repo-wide view.  Built once per lint run by the
+    engine and attached to every ModuleModel as ``model.repo``."""
+
+    def __init__(self, models: Sequence[ModuleModel], cfg) -> None:
+        self.models = list(models)
+        p8 = cfg.rule_cfg("PL008", PL008_DEFAULTS)
+        self.blocking_names: Set[str] = set(p8["blocking"])
+        self.lock_glob: str = str(p8["lock_glob"])
+        self._graph_applies = (
+            lambda path: cfg.rule_applies("PL007", PL007_DEFAULTS, path))
+        self._untraced_globs = tuple(
+            getattr(cfg, "untraced_functions", ()) or ())
+
+        self._by_path: Dict[str, ModuleModel] = {m.path: m for m in models}
+        self._dotted: List[Tuple[ModuleModel, str]] = []
+        for m in models:
+            d = PurePosixPath(m.path).with_suffix("").as_posix().replace("/", ".")
+            self._dotted.append((m, d))
+            if d.endswith(".__init__"):
+                self._dotted.append((m, d[: -len(".__init__")]))
+
+        self._classes: Dict[int, Dict[str, ClassFacts]] = {}  # id(model)
+        self._module_locks: Dict[int, Dict[str, LockInfo]] = {}
+        self.classes_by_name: Dict[str, List[ClassFacts]] = {}
+        self.methods_by_name: Dict[str, List[FunctionInfo]] = {}
+        self._func_model: Dict[int, ModuleModel] = {}
+        self.all_funcs: List[Tuple[ModuleModel, FunctionInfo]] = []
+        for m in models:
+            self._collect_facts(m)
+            for info in sorted(m.functions.values(),
+                               key=lambda i: i.node.lineno):
+                self.all_funcs.append((m, info))
+                self._func_model[id(info)] = m
+        for m in models:
+            m.repo = self
+
+        self._local_types_cache: Dict[int, Dict[str, tuple]] = {}
+        self._global_types_cache: Dict[int, Dict[str, tuple]] = {}
+        self._calls: Dict[int, List[Tuple[ast.Call, List[FunctionInfo], bool]]] = {}
+        self._blocking: Dict[int, str] = {}       # id(info) -> witness chain
+        self._acquires: Dict[int, Dict[str, str]] = {}
+        self._collect_calls_and_seeds()
+        self._fixpoint_summaries()
+        self._propagate_traced_cross()
+        self.returns_donating: Dict[str, Set[int]] = {}
+        self.donating_attrs: Dict[str, Set[int]] = {}
+        self._infer_donating()
+        self._region_cache: Dict[int, Tuple[List[Edge], List[RegionEvent]]] = {}
+        self._graph_cache: Optional[dict] = None
+
+    # ------------------------------------------------------------ facts
+    def _collect_facts(self, model: ModuleModel) -> None:
+        classes: Dict[str, ClassFacts] = {}
+        for node in ast.walk(model.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            cf = ClassFacts(node.name, model, node, {}, {}, {}, {}, {})
+            for info in model.functions.values():
+                if (info.parent_class == node.name
+                        and info.parent_function is None):
+                    cf.methods.setdefault(info.name, info)
+            for stmt in node.body:  # dataclass-style field annotations
+                if (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)):
+                    cf.attr_ann.setdefault(stmt.target.id, stmt.annotation)
+            for info in cf.methods.values():
+                for sub in ast.walk(info.node):
+                    tgts, value, ann = [], None, None
+                    if isinstance(sub, ast.Assign):
+                        tgts, value = sub.targets, sub.value
+                    elif isinstance(sub, ast.AnnAssign):
+                        tgts, value, ann = [sub.target], sub.value, sub.annotation
+                    for t in tgts:
+                        if not (isinstance(t, ast.Attribute)
+                                and isinstance(t.value, ast.Name)
+                                and t.value.id == "self"):
+                            continue
+                        if ann is not None:
+                            cf.attr_ann.setdefault(t.attr, ann)
+                        if isinstance(value, ast.Call):
+                            cf.attr_call.setdefault(t.attr, value)
+                            self._note_lock(model, cf, t.attr, value)
+            classes[node.name] = cf
+            self.classes_by_name.setdefault(node.name, []).append(cf)
+            for mname, mi in cf.methods.items():
+                self.methods_by_name.setdefault(mname, []).append(mi)
+        self._classes[id(model)] = classes
+
+        mlocks: Dict[str, LockInfo] = {}
+        stem = PurePosixPath(model.path).stem
+        for stmt in model.tree.body:
+            if not (isinstance(stmt, ast.Assign)
+                    and isinstance(stmt.value, ast.Call)):
+                continue
+            key = self._lock_key(stmt.value, None)
+            if key is None:
+                continue
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    mlocks[t.id] = LockInfo(
+                        key if key != "" else f"{stem}.{t.id}",
+                        model.path, stmt.lineno)
+        self._module_locks[id(model)] = mlocks
+
+    @staticmethod
+    def _lock_key(call: ast.Call, default: Optional[str]) -> Optional[str]:
+        """Lock-creation calls -> graph key ("" = use the caller's
+        default spelling); None for non-lock calls."""
+        name = dotted_name(call.func)
+        last = name.split(".")[-1] if name else None
+        if last in _LOCK_FACTORIES:
+            return default or ""
+        if last in _NAMED_LOCK_FACTORIES:
+            if call.args and isinstance(call.args[0], ast.Constant) \
+                    and isinstance(call.args[0].value, str):
+                return call.args[0].value
+            return default or ""
+        return None
+
+    def _note_lock(self, model: ModuleModel, cf: ClassFacts,
+                   attr: str, call: ast.Call) -> None:
+        name = dotted_name(call.func)
+        last = name.split(".")[-1] if name else None
+        if last == "Condition":
+            if call.args:
+                inner = dotted_name(call.args[0])
+                if inner and inner.startswith("self."):
+                    cf.cond_alias[attr] = inner.split(".")[1]
+                    return
+            cf.locks[attr] = LockInfo(  # Condition() owns a fresh lock
+                f"{cf.name}.{attr}", model.path, call.lineno)
+            return
+        key = self._lock_key(call, f"{cf.name}.{attr}")
+        if key is not None:
+            cf.locks[attr] = LockInfo(key or f"{cf.name}.{attr}",
+                                      model.path, call.lineno)
+
+    # ------------------------------------------------------- module lookup
+    def _module_by_import(self, model: ModuleModel,
+                          modstr: str) -> Optional[ModuleModel]:
+        if modstr.startswith("."):
+            level = len(modstr) - len(modstr.lstrip("."))
+            rest = modstr.lstrip(".")
+            base = PurePosixPath(model.path).parent
+            for _ in range(level - 1):
+                base = base.parent
+            cand = base.joinpath(*rest.split(".")) if rest else base
+            for suffix in (".py", "/__init__.py"):
+                hit = self._by_path.get(cand.as_posix() + suffix)
+                if hit is not None:
+                    return hit
+            return None
+        for m2, dotted in self._dotted:
+            if dotted == modstr or dotted.endswith("." + modstr):
+                return m2
+        return None
+
+    def _resolve_imported(self, model: ModuleModel, localname: str):
+        """`from m import x as localname` -> ("func", info) | ("class",
+        cf) | ("module", model) | None."""
+        imp = model.imported_names.get(localname)
+        if imp is None:
+            return None
+        mod, orig = imp
+        m2 = self._module_by_import(model, mod) if mod else None
+        if m2 is not None:
+            for info in m2._by_name.get(orig, []):
+                if info.parent_class is None and info.parent_function is None:
+                    return ("func", info)
+            cf = self._classes.get(id(m2), {}).get(orig)
+            if cf is not None:
+                return ("class", cf)
+        joined = (mod + ("" if mod.endswith(".") else ".") + orig
+                  if mod else orig)
+        m3 = self._module_by_import(model, joined)
+        if m3 is not None:
+            return ("module", m3)
+        return None
+
+    def class_in_module(self, model: ModuleModel,
+                        name: str) -> Optional[ClassFacts]:
+        return self._classes.get(id(model), {}).get(name)
+
+    def module_locks(self, model: ModuleModel) -> Dict[str, LockInfo]:
+        return self._module_locks.get(id(model), {})
+
+    # ------------------------------------------------------------- typing
+    def _resolve_class_ref(self, model: ModuleModel,
+                           expr: ast.AST) -> Optional[ClassFacts]:
+        d = dotted_name(expr)
+        if not d:
+            return None
+        parts = d.split(".")
+        if len(parts) == 1:
+            cf = self.class_in_module(model, d)
+            if cf is not None:
+                return cf
+            r = self._resolve_imported(model, d)
+            if r is not None and r[0] == "class":
+                return r[1]
+            return None
+        root, last = parts[0], parts[-1]
+        target = model.module_aliases.get(root)
+        m2 = self._module_by_import(model, target) if target else None
+        if m2 is None:
+            r = self._resolve_imported(model, root)
+            m2 = r[1] if r is not None and r[0] == "module" else None
+        if m2 is not None:
+            return self.class_in_module(m2, last)
+        return None
+
+    def type_from_ann(self, model: ModuleModel, ann: ast.AST) -> tuple:
+        if isinstance(ann, ast.Constant):
+            if not isinstance(ann.value, str):
+                return OTHER  # e.g. `None` in Optional
+            try:
+                ann = ast.parse(ann.value, mode="eval").body
+            except SyntaxError:
+                return UNKNOWN
+        if isinstance(ann, (ast.Name, ast.Attribute)):
+            cf = self._resolve_class_ref(model, ann)
+            return ("class", cf) if cf is not None else OTHER
+        if isinstance(ann, ast.Subscript):
+            base = dotted_name(ann.value) or ""
+            last = base.split(".")[-1]
+            sl = ann.slice
+            elts = list(sl.elts) if isinstance(sl, ast.Tuple) else [sl]
+            if last == "Optional":
+                return self.type_from_ann(model, elts[0])
+            if last == "Union":
+                for e in elts:
+                    t = self.type_from_ann(model, e)
+                    if t[0] == "class":
+                        return t
+                return OTHER
+            if last in ("Dict", "dict", "Mapping", "MutableMapping",
+                        "OrderedDict", "DefaultDict", "defaultdict"):
+                return ("dict", self.type_from_ann(model, elts[-1]))
+            if last in ("List", "list", "Sequence", "Iterable", "Tuple",
+                        "tuple", "Set", "set", "FrozenSet", "frozenset",
+                        "Deque", "deque", "Iterator"):
+                return ("list", self.type_from_ann(model, elts[0]))
+            return OTHER
+        return UNKNOWN
+
+    def _attr_type(self, cf: ClassFacts, attr: str) -> tuple:
+        if attr in cf.locks or attr in cf.cond_alias:
+            return OTHER
+        ann = cf.attr_ann.get(attr)
+        if ann is not None:
+            return self.type_from_ann(cf.model, ann)
+        call = cf.attr_call.get(attr)
+        if call is not None:
+            return self._call_result_type(cf.model, None, call, self_cf=cf)
+        return UNKNOWN
+
+    _BUILTIN_LISTY = {"list", "sorted", "tuple", "set", "frozenset",
+                      "reversed", "zip", "enumerate", "range", "map",
+                      "filter"}
+    _DICT_ACCESSORS = {"get", "setdefault", "pop"}
+
+    def _call_result_type(self, model: ModuleModel,
+                          info: Optional[FunctionInfo], call: ast.Call,
+                          self_cf: Optional[ClassFacts] = None) -> tuple:
+        """Best-effort type of a call *result* — enough to keep the
+        name-based fallback away from known non-repo receivers."""
+        cf2 = self._resolve_class_ref(model, call.func)
+        if cf2 is not None:
+            return ("class", cf2)
+        f = call.func
+        if isinstance(f, ast.Name):
+            if f.id in self._BUILTIN_LISTY:
+                return ("list", UNKNOWN)
+            if f.id == "dict":
+                return ("dict", UNKNOWN)
+            if f.id in model.imported_names:
+                # a repo class would have resolved above; anything else
+                # imported constructs a non-repo value
+                return OTHER
+            return UNKNOWN
+        if isinstance(f, ast.Attribute):
+            bt = self.chain_type(model, info, f.value, self_cf=self_cf)
+            if bt[0] == "dict" and f.attr in self._DICT_ACCESSORS:
+                return bt[1]  # dict accessor returns the value type
+            if bt[0] in ("other", "dict", "list", "lock"):
+                return OTHER  # method result of a non-repo object
+        return UNKNOWN
+
+    def _local_types(self, model: ModuleModel,
+                     info: FunctionInfo) -> Dict[str, tuple]:
+        cached = self._local_types_cache.get(id(info))
+        if cached is not None:
+            return cached
+        out: Dict[str, tuple] = {}
+        # publish early: chain_type on an assignment's RHS may recurse
+        # into this same function's locals (earlier bindings are visible)
+        self._local_types_cache[id(info)] = out
+        node = info.node
+        args = getattr(node, "args", None)
+        if args is not None:
+            for a in (list(getattr(args, "posonlyargs", []))
+                      + list(args.args) + list(args.kwonlyargs)):
+                if a.annotation is not None:
+                    out[a.arg] = self.type_from_ann(model, a.annotation)
+        stem = PurePosixPath(model.path).stem
+        for sub in own_nodes(node):
+            tgts, value, ann = [], None, None
+            if isinstance(sub, ast.Assign):
+                tgts, value = sub.targets, sub.value
+            elif isinstance(sub, ast.AnnAssign):
+                tgts, value, ann = [sub.target], sub.value, sub.annotation
+            names = [t.id for t in tgts if isinstance(t, ast.Name)]
+            if not names:
+                continue
+            if ann is not None:
+                for n in names:
+                    out[n] = self.type_from_ann(model, ann)
+                continue
+            if value is None:
+                continue
+            if isinstance(value, ast.Call):
+                for n in names:
+                    key = self._lock_key(
+                        value, f"{stem}.{info.qualname}.{n}")
+                    if key is not None:
+                        out[n] = ("lock",
+                                  LockInfo(key, model.path, sub.lineno))
+                        continue
+                    t = self._call_result_type(model, info, value)
+                    if t is not UNKNOWN:
+                        out[n] = t
+                continue
+            t = self.chain_type(model, info, value)
+            if t is not UNKNOWN and not isinstance(value, ast.Name):
+                for n in names:
+                    out[n] = t
+        return out
+
+    def _global_types(self, model: ModuleModel) -> Dict[str, tuple]:
+        """Types of module-level names (``_EDGES: Dict[...] = {}``) —
+        the same narrowing :meth:`_local_types` does for locals."""
+        cached = self._global_types_cache.get(id(model))
+        if cached is not None:
+            return cached
+        out: Dict[str, tuple] = {}
+        self._global_types_cache[id(model)] = out
+        for sub in model.tree.body:
+            tgts, value, ann = [], None, None
+            if isinstance(sub, ast.Assign):
+                tgts, value = sub.targets, sub.value
+            elif isinstance(sub, ast.AnnAssign):
+                tgts, value, ann = [sub.target], sub.value, sub.annotation
+            names = [t.id for t in tgts if isinstance(t, ast.Name)]
+            if not names:
+                continue
+            if ann is not None:
+                for n in names:
+                    out[n] = self.type_from_ann(model, ann)
+                continue
+            if value is None or isinstance(value, ast.Name):
+                continue
+            t = (self._call_result_type(model, None, value)
+                 if isinstance(value, ast.Call)
+                 else self.chain_type(model, None, value))
+            if t is not UNKNOWN:
+                for n in names:
+                    out[n] = t
+        return out
+
+    def chain_type(self, model: ModuleModel,
+                   info: Optional[FunctionInfo], node: ast.AST,
+                   self_cf: Optional[ClassFacts] = None) -> tuple:
+        if isinstance(node, ast.Name):
+            nid = node.id
+            if nid in ("self", "cls"):
+                if info is not None and info.parent_class:
+                    cf = self.class_in_module(model, info.parent_class)
+                    return ("class", cf) if cf is not None else UNKNOWN
+                if self_cf is not None:
+                    return ("class", self_cf)
+            if info is not None:
+                lt = self._local_types(model, info).get(nid)
+                if lt is not None:
+                    return lt
+            gt = self._global_types(model).get(nid)
+            if gt is not None:
+                return gt
+            if nid in model.module_aliases:
+                m2 = self._module_by_import(model, model.module_aliases[nid])
+                return ("module", m2) if m2 is not None else OTHER
+            r = self._resolve_imported(model, nid)
+            if r is not None:
+                if r[0] == "class":
+                    return ("class", r[1])  # ClassName.method(...) form
+                if r[0] == "module":
+                    return ("module", r[1])
+                return OTHER  # imported function/constant
+            cf = self.class_in_module(model, nid)
+            if cf is not None:
+                return ("class", cf)
+            return UNKNOWN
+        if isinstance(node, ast.Attribute):
+            bt = self.chain_type(model, info, node.value, self_cf)
+            if bt[0] == "class":
+                return self._attr_type(bt[1], node.attr)
+            if bt[0] == "module":
+                cf = self.class_in_module(bt[1], node.attr)
+                if cf is not None:
+                    return ("class", cf)
+                return OTHER
+            if bt[0] in ("other", "dict", "list", "lock"):
+                return OTHER
+            if node.attr == "at":
+                # jnp's functional-update property: `x.at[i].set(v)` must
+                # never resolve to a repo method named `set`
+                return OTHER
+            return UNKNOWN
+        if isinstance(node, ast.Subscript):
+            bt = self.chain_type(model, info, node.value, self_cf)
+            if bt[0] in ("dict", "list"):
+                return bt[1]
+            if bt[0] in ("other", "lock"):
+                return OTHER
+            return UNKNOWN
+        if isinstance(node, ast.Call):
+            return self._call_result_type(model, info, node, self_cf=self_cf)
+        if isinstance(node, (ast.List, ast.Tuple, ast.Set, ast.ListComp,
+                             ast.SetComp, ast.GeneratorExp)):
+            return ("list", UNKNOWN)
+        if isinstance(node, (ast.Dict, ast.DictComp)):
+            return ("dict", UNKNOWN)
+        if isinstance(node, (ast.Constant, ast.JoinedStr, ast.Compare,
+                             ast.BoolOp)):
+            return OTHER
+        return UNKNOWN
+
+    # --------------------------------------------------------- resolution
+    def resolve_call(self, model: ModuleModel, info: Optional[FunctionInfo],
+                     call: ast.Call) -> Tuple[List[FunctionInfo], bool]:
+        """-> (candidate targets, confident).  ``confident`` is False for
+        the name-based fallback on an untyped receiver; confident-only
+        edges drive traced/donation propagation."""
+        func = call.func
+        if isinstance(func, ast.Name):
+            nid = func.id
+            cands = [i for i in model._by_name.get(nid, [])
+                     if not (i.parent_class and i.parent_function is None)]
+            if cands:
+                return cands, True
+            cf = self.class_in_module(model, nid)
+            if cf is None:
+                r = self._resolve_imported(model, nid)
+                if r is not None:
+                    if r[0] == "func":
+                        return [r[1]], True
+                    if r[0] == "class":
+                        cf = r[1]
+            if cf is not None:
+                init = cf.methods.get("__init__")
+                return ([init], True) if init is not None else ([], True)
+            return [], True
+        if isinstance(func, ast.Attribute):
+            mname = func.attr
+            bt = self.chain_type(model, info, func.value)
+            if bt[0] == "class":
+                hit = self._method_lookup(bt[1], mname)
+                return ([hit], True) if hit is not None else ([], True)
+            if bt[0] == "module":
+                cands = [i for i in bt[1]._by_name.get(mname, [])
+                         if i.parent_class is None
+                         and i.parent_function is None]
+                return cands, True
+            if bt[0] in ("other", "dict", "list", "lock"):
+                return [], True
+            return list(self.methods_by_name.get(mname, [])), False
+        return [], True
+
+    def _method_lookup(self, cf: ClassFacts,
+                       name: str, _depth: int = 0) -> Optional[FunctionInfo]:
+        hit = cf.methods.get(name)
+        if hit is not None or _depth > 4:
+            return hit
+        for base in cf.node.bases:
+            bcf = self._resolve_class_ref(cf.model, base)
+            if bcf is not None:
+                hit = self._method_lookup(bcf, name, _depth + 1)
+                if hit is not None:
+                    return hit
+        return None
+
+    def resolve_lock_expr(self, model: ModuleModel,
+                          info: Optional[FunctionInfo],
+                          expr: ast.AST) -> Optional[str]:
+        """A ``with``-item (or condition receiver) -> lock graph key."""
+        if isinstance(expr, ast.Call):
+            f = expr.func
+            if isinstance(f, ast.Attribute) and f.attr == "acquire":
+                expr = f.value
+            else:
+                return None
+        if isinstance(expr, ast.Name):
+            if info is not None:
+                lt = self._local_types(model, info).get(expr.id)
+                if lt is not None and lt[0] == "lock":
+                    return lt[1].key
+            li = self.module_locks(model).get(expr.id)
+            if li is not None:
+                return li.key
+        elif isinstance(expr, ast.Attribute):
+            bt = self.chain_type(model, info, expr.value)
+            if bt[0] == "class":
+                cf = bt[1]
+                attr = cf.cond_alias.get(expr.attr, expr.attr)
+                li = cf.locks.get(attr)
+                if li is not None:
+                    return li.key
+            if bt[0] == "module":
+                li = self.module_locks(bt[1]).get(expr.attr)
+                if li is not None:
+                    return li.key
+        d = dotted_name(expr)
+        last = (d.split(".")[-1] if d else
+                expr.attr if isinstance(expr, ast.Attribute) else None)
+        if last and fnmatch.fnmatch(last.lower(), self.lock_glob):
+            return f"<unresolved>.{last}"
+        return None
+
+    # ---------------------------------------------------------- summaries
+    def _collect_calls_and_seeds(self) -> None:
+        for model, info in self.all_funcs:
+            calls: List[Tuple[ast.Call, List[FunctionInfo], bool]] = []
+            acq: Dict[str, str] = {}
+            for sub in own_nodes(info.node):
+                if isinstance(sub, (ast.With, ast.AsyncWith)):
+                    for item in sub.items:
+                        k = self.resolve_lock_expr(model, info,
+                                                   item.context_expr)
+                        if k is not None:
+                            acq.setdefault(k, f"{model.path}:{sub.lineno}")
+                if not isinstance(sub, ast.Call):
+                    continue
+                name, last = _call_last(sub)
+                if last in self.blocking_names \
+                        and not self._blocking_exempt(sub, name, last) \
+                        and id(info) not in self._blocking:
+                    self._blocking[id(info)] = \
+                        f"{name or last}(...) at {model.path}:{sub.lineno}"
+                targets, confident = self.resolve_call(model, info, sub)
+                if targets:
+                    calls.append((sub, targets, confident))
+            self._calls[id(info)] = calls
+            self._acquires[id(info)] = acq
+
+    @staticmethod
+    def _blocking_exempt(call: ast.Call, name: Optional[str],
+                         last: str) -> bool:
+        # "sep".join(...) is a string op; os.path.join is path algebra
+        if last == "join":
+            if isinstance(call.func, ast.Attribute) \
+                    and isinstance(call.func.value, ast.Constant):
+                return True
+            if name and "path" in name.split(".")[:-1]:
+                return True
+        return False
+
+    def _fixpoint_summaries(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for model, info in self.all_funcs:
+                acq = self._acquires[id(info)]
+                for call, targets, _conf in self._calls[id(info)]:
+                    for t in targets:
+                        if t is info:
+                            continue
+                        tb = self._blocking.get(id(t))
+                        if tb is not None and id(info) not in self._blocking:
+                            self._blocking[id(info)] = \
+                                f"{t.qualname} -> {tb}"
+                            changed = True
+                        for k, via in self._acquires.get(id(t), {}).items():
+                            if k not in acq:
+                                acq[k] = f"{t.qualname} -> {via}"
+                                changed = True
+
+    def blocking_chain(self, info: FunctionInfo) -> Optional[str]:
+        return self._blocking.get(id(info))
+
+    def acquires(self, info: FunctionInfo) -> Dict[str, str]:
+        return self._acquires.get(id(info), {})
+
+    # ----------------------------------------------- traced / donation
+    def _untraced(self, info: FunctionInfo) -> bool:
+        return any(fnmatch.fnmatch(info.name, g)
+                   or fnmatch.fnmatch(info.qualname, g)
+                   for g in self._untraced_globs)
+
+    def _propagate_traced_cross(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for model, info in self.all_funcs:
+                if not info.traced:
+                    continue
+                for _call, targets, confident in self._calls[id(info)]:
+                    if not confident:
+                        continue  # fallback edges are too coarse to taint
+                    for t in targets:
+                        if t.traced or self._untraced(t):
+                            continue
+                        tm = self._func_model[id(t)]
+                        via = (f"called from {info.qualname}"
+                               if tm is model else
+                               f"called from {info.qualname} [{model.path}]")
+                        changed |= t.mark(via)
+            if changed:
+                for m in self.models:
+                    m.propagate_traced()
+
+    def _infer_donating(self) -> None:
+        """Name-level donation facts: functions *returning* a donating
+        jit program (``returns_donating``) and attributes *holding* one
+        (``donating_attrs``) — the `_advance_for -> self._advance ->
+        _advance_fn()` chain in ingest.pipeline."""
+        changed = True
+        while changed:
+            changed = False
+            for model, info in self.all_funcs:
+                for sub in own_nodes(info.node):
+                    value = None
+                    if isinstance(sub, ast.Return):
+                        value = sub.value
+                    elif isinstance(sub, ast.Assign):
+                        value = sub.value
+                    if value is None:
+                        continue
+                    pos: Optional[Set[int]] = None
+                    if isinstance(value, ast.Call):
+                        pos = donated_positions(value)
+                        if pos is None:
+                            _, last = _call_last(value)
+                            pos = self.returns_donating.get(last or "")
+                    else:
+                        d = dotted_name(value)
+                        if d:
+                            pos = self.donating_attrs.get(d.split(".")[-1])
+                    if not pos:
+                        continue
+                    if isinstance(sub, ast.Return):
+                        if self.returns_donating.get(info.name) != pos:
+                            self.returns_donating[info.name] = pos
+                            changed = True
+                        continue
+                    for t in sub.targets:
+                        if (isinstance(t, ast.Attribute)
+                                and isinstance(t.value, ast.Name)
+                                and t.value.id in ("self", "cls")):
+                            if self.donating_attrs.get(t.attr) != pos:
+                                self.donating_attrs[t.attr] = pos
+                                changed = True
+
+    # ------------------------------------------------------------ regions
+    def region_data(self, model: ModuleModel
+                    ) -> Tuple[List[Edge], List[RegionEvent]]:
+        cached = self._region_cache.get(id(model))
+        if cached is not None:
+            return cached
+        edges: List[Edge] = []
+        events: List[RegionEvent] = []
+
+        def handle_call(call: ast.Call, held: List[str],
+                        info: Optional[FunctionInfo]) -> None:
+            name, last = _call_last(call)
+            if last in ("wait", "wait_for") \
+                    and isinstance(call.func, ast.Attribute):
+                ck = self.resolve_lock_expr(model, info, call.func.value)
+                if ck is not None:
+                    # waiting on a condition releases *its* lock only;
+                    # any other held lock stays held for the wait's
+                    # full (unbounded) duration
+                    others = [h for h in held if h != ck]
+                    if others:
+                        events.append(RegionEvent(
+                            "wait-extra", call, others, ck, ""))
+                    return
+            targets, _conf = self.resolve_call(model, info, call)
+            for t in targets:
+                if held and last not in self.blocking_names:
+                    # raw primitives under a lexical lock are PL002's
+                    # report; PL008 owns the transitive case
+                    tb = self._blocking.get(id(t))
+                    if tb is not None:
+                        events.append(RegionEvent(
+                            "blocking", call, list(held), t.qualname, tb))
+                for k, via in self._acquires.get(id(t), {}).items():
+                    for h in held:
+                        if h != k:
+                            edges.append(Edge(
+                                h, k, model.path, call.lineno,
+                                f"calls {t.qualname} -> {via}"))
+
+        def walk(node: ast.AST, held: List[str],
+                 info: Optional[FunctionInfo]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda, ast.ClassDef)):
+                    continue
+                if isinstance(child, (ast.With, ast.AsyncWith)):
+                    acquired: List[str] = []
+                    for item in child.items:
+                        walk(item.context_expr, held, info)
+                        if isinstance(item.context_expr, ast.Call):
+                            handle_call(item.context_expr, held, info)
+                        k = self.resolve_lock_expr(model, info,
+                                                   item.context_expr)
+                        if k is not None:
+                            for h in held + acquired:
+                                if h != k:
+                                    edges.append(Edge(
+                                        h, k, model.path, child.lineno,
+                                        "nested with"))
+                            acquired.append(k)
+                    inner = held + acquired
+                    for stmt in child.body:
+                        walk(stmt, inner, info)
+                        if isinstance(stmt, ast.Call):
+                            handle_call(stmt, inner, info)
+                    continue
+                if isinstance(child, ast.Call):
+                    handle_call(child, held, info)
+                walk(child, held, info)
+
+        for info in sorted(model.functions.values(),
+                           key=lambda i: i.node.lineno):
+            walk(info.node, [], info)
+        for stmt in model.tree.body:
+            if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                walk(stmt, [], None)
+        self._region_cache[id(model)] = (edges, events)
+        return edges, events
+
+    # --------------------------------------------------------- lock graph
+    def lock_graph(self) -> dict:
+        """The repo-wide acquired-before graph (JSON-shaped), built from
+        the modules PL007 applies to (so intentionally-deadlocking test
+        fixtures don't pollute the artifact)."""
+        if self._graph_cache is not None:
+            return self._graph_cache
+        by_pair: Dict[Tuple[str, str], List[dict]] = {}
+        nodes: Set[str] = set()
+        for model in self.models:
+            if not self._graph_applies(model.path):
+                continue
+            for m_locks in (self.module_locks(model),):
+                nodes.update(li.key for li in m_locks.values())
+            for cf in self._classes.get(id(model), {}).values():
+                nodes.update(li.key for li in cf.locks.values())
+            for e in self.region_data(model)[0]:
+                nodes.update((e.src, e.dst))
+                by_pair.setdefault((e.src, e.dst), []).append(
+                    {"path": e.path, "line": e.line, "via": e.via})
+        edges = [{"src": s, "dst": d, "sites": sites}
+                 for (s, d), sites in sorted(by_pair.items())]
+        cycles = self._find_cycles(
+            sorted(nodes), {p: v for p, v in by_pair.items()})
+        self._graph_cache = {
+            "locks": sorted(nodes), "edges": edges, "cycles": cycles}
+        return self._graph_cache
+
+    @staticmethod
+    def _find_cycles(nodes: List[str],
+                     by_pair: Dict[Tuple[str, str], List[dict]]
+                     ) -> List[dict]:
+        adj: Dict[str, List[str]] = {n: [] for n in nodes}
+        for (s, d) in by_pair:
+            adj.setdefault(s, []).append(d)
+        index: Dict[str, int] = {}
+        low: Dict[str, int] = {}
+        on_stack: Set[str] = set()
+        stack: List[str] = []
+        sccs: List[List[str]] = []
+        counter = [0]
+
+        def strongconnect(v: str) -> None:  # iterative Tarjan
+            work = [(v, 0)]
+            while work:
+                node, pi = work[-1]
+                if pi == 0:
+                    index[node] = low[node] = counter[0]
+                    counter[0] += 1
+                    stack.append(node)
+                    on_stack.add(node)
+                recurse = False
+                for w in adj.get(node, [])[pi:]:
+                    pi += 1
+                    if w not in index:
+                        work[-1] = (node, pi)
+                        work.append((w, 0))
+                        recurse = True
+                        break
+                    if w in on_stack:
+                        low[node] = min(low[node], index[w])
+                if recurse:
+                    continue
+                work[-1] = (node, pi)
+                if low[node] == index[node]:
+                    scc = []
+                    while True:
+                        w = stack.pop()
+                        on_stack.discard(w)
+                        scc.append(w)
+                        if w == node:
+                            break
+                    sccs.append(scc)
+                work.pop()
+                if work:
+                    parent = work[-1][0]
+                    low[parent] = min(low[parent], low[node])
+
+        for n in nodes:
+            if n not in index:
+                strongconnect(n)
+        cycles: List[dict] = []
+        for scc in sccs:
+            members = set(scc)
+            cyc_edges = [
+                {"src": s, "dst": d, **sites[0]}
+                for (s, d), sites in sorted(by_pair.items())
+                if (len(members) > 1 and s in members and d in members)
+                or (s == d and s in members)]
+            if cyc_edges:
+                cycles.append({"locks": sorted(members),
+                               "edges": cyc_edges})
+        return cycles
+
+    def lock_graph_dot(self) -> str:
+        g = self.lock_graph()
+        cyclic = {(e["src"], e["dst"])
+                  for c in g["cycles"] for e in c["edges"]}
+        out = ["digraph lockorder {", "  rankdir=LR;",
+               '  node [shape=box, fontname="monospace"];']
+        for n in g["locks"]:
+            out.append(f'  "{n}";')
+        for e in g["edges"]:
+            site = e["sites"][0]
+            color = ', color=red, penwidth=2.0' \
+                if (e["src"], e["dst"]) in cyclic else ""
+            out.append(
+                f'  "{e["src"]}" -> "{e["dst"]}" '
+                f'[label="{site["path"]}:{site["line"]}"{color}];')
+        out.append("}")
+        return "\n".join(out) + "\n"
+
+    def lock_cycles(self) -> List[dict]:
+        """Cycles with an anchor site for PL007's finding placement."""
+        out = []
+        for cyc in self.lock_graph()["cycles"]:
+            anchor = min(cyc["edges"], key=lambda e: (e["path"], e["line"]))
+            out.append({**cyc, "anchor": anchor})
+        return out

@@ -1,5 +1,13 @@
 """File discovery, suppression handling, and the lint driver.
 
+The driver is two-phase: *all* requested files are parsed into
+ModuleModels first, linked into one :class:`~.crossmodule.RepoModel`
+(the interprocedural layer PL007/PL008 and the cross-module traced /
+donation propagation ride on), and only then are the rules run per
+file.  ``--changed-only`` narrows which files get *reported*; the repo
+model is always built from the whole scan set, so interprocedural
+facts stay sound as the diff shrinks.
+
 Suppressions::
 
     x = jnp.zeros((K,))  # podlint: ignore[PL001] -- readout-only buffer
@@ -15,11 +23,13 @@ import ast
 import dataclasses
 import os
 import re
+import subprocess
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from .analysis import ModuleModel
 from .config import Config, load_config
+from .crossmodule import RepoModel
 from .rules import REGISTRY, Finding
 
 _SUPPRESS_RE = re.compile(
@@ -32,6 +42,10 @@ class LintResult:
     suppressed: int
     files: int
     errors: List[str]  # config/usage problems -> exit 2
+    # the acquired-before graph dict (crossmodule.RepoModel.lock_graph)
+    # when the caller asked for it via want_lock_graph
+    lock_graph: Optional[dict] = None
+    lock_graph_dot: Optional[str] = None
 
 
 def _suppressions(source: str) -> Tuple[bool, Dict[int, Optional[Set[str]]]]:
@@ -76,21 +90,27 @@ def discover(paths: Sequence[str], cfg: Config, root: str
     return files, errors
 
 
-def lint_source(source: str, relpath: str, cfg: Config,
-                select: Optional[Set[str]] = None,
-                ignore: Optional[Set[str]] = None
-                ) -> Tuple[List[Finding], int]:
-    """Lint one module's text -> (findings, n_suppressed)."""
+def _parse_one(source: str, relpath: str, cfg: Config
+               ) -> Tuple[Optional[ModuleModel], List[Finding],
+                          Dict[int, Optional[Set[str]]]]:
+    """-> (model | None, PL000 findings, per-line suppressions).
+    A skip-file pragma or a parse error yields model=None."""
     skip, by_line = _suppressions(source)
     if skip:
-        return [], 0
+        return None, [], {}
     try:
         tree = ast.parse(source, filename=relpath)
     except SyntaxError as e:
-        return [Finding(relpath, e.lineno or 1, (e.offset or 0) + 1,
-                        "PL000", f"parse error: {e.msg}")], 0
-    model = ModuleModel(relpath, tree, source,
-                        tuple(cfg.traced_functions))
+        return None, [Finding(relpath, e.lineno or 1, (e.offset or 0) + 1,
+                              "PL000", f"parse error: {e.msg}")], {}
+    return (ModuleModel(relpath, tree, source, tuple(cfg.traced_functions)),
+            [], by_line)
+
+
+def _run_rules(model: ModuleModel, cfg: Config,
+               select: Optional[Set[str]], ignore: Optional[Set[str]],
+               by_line: Dict[int, Optional[Set[str]]]
+               ) -> Tuple[List[Finding], int]:
     findings: List[Finding] = []
     suppressed = 0
     for code, rule_cls in sorted(REGISTRY.items()):
@@ -98,7 +118,7 @@ def lint_source(source: str, relpath: str, cfg: Config,
             continue
         if ignore and code in ignore:
             continue
-        if not cfg.rule_applies(code, rule_cls.defaults, relpath):
+        if not cfg.rule_applies(code, rule_cls.defaults, model.path):
             continue
         rule = rule_cls()
         rcfg = cfg.rule_cfg(code, rule_cls.defaults)
@@ -108,15 +128,55 @@ def lint_source(source: str, relpath: str, cfg: Config,
                 suppressed += 1
             else:
                 findings.append(f)
+    return findings, suppressed
+
+
+def lint_source(source: str, relpath: str, cfg: Config,
+                select: Optional[Set[str]] = None,
+                ignore: Optional[Set[str]] = None
+                ) -> Tuple[List[Finding], int]:
+    """Lint one module's text -> (findings, n_suppressed).  The module
+    is linked into a singleton RepoModel so the interprocedural rules
+    see their single-file view (fixture tests rely on this)."""
+    model, parse_findings, by_line = _parse_one(source, relpath, cfg)
+    if model is None:
+        return parse_findings, 0
+    RepoModel([model], cfg)
+    findings, suppressed = _run_rules(model, cfg, select, ignore, by_line)
     findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
     return findings, suppressed
+
+
+def changed_files(root: str, base: str) -> Tuple[Set[str], List[str]]:
+    """Repo-relative paths touched vs ``base`` plus untracked files ->
+    (paths, errors)."""
+    out: Set[str] = set()
+    errors: List[str] = []
+    for argv in (["git", "diff", "--name-only", base],
+                 ["git", "ls-files", "--others", "--exclude-standard"]):
+        try:
+            proc = subprocess.run(argv, cwd=root, capture_output=True,
+                                  text=True, timeout=60)
+        except (OSError, subprocess.TimeoutExpired) as e:
+            errors.append(f"--changed-only: {' '.join(argv)}: {e}")
+            continue
+        if proc.returncode != 0:
+            errors.append(f"--changed-only: {' '.join(argv)} failed: "
+                          f"{proc.stderr.strip()}")
+            continue
+        out.update(line.strip() for line in proc.stdout.splitlines()
+                   if line.strip())
+    return out, errors
 
 
 def lint_paths(paths: Sequence[str], *,
                config_path: Optional[str] = None,
                root: str = ".",
                select: Optional[Iterable[str]] = None,
-               ignore: Optional[Iterable[str]] = None) -> LintResult:
+               ignore: Optional[Iterable[str]] = None,
+               changed_only: bool = False,
+               diff_base: str = "HEAD",
+               want_lock_graph: bool = False) -> LintResult:
     try:
         cfg = load_config(config_path, REGISTRY.keys())
     except Exception as e:
@@ -130,12 +190,37 @@ def lint_paths(paths: Sequence[str], *,
     files, errors = discover(paths, cfg, root)
     if errors:
         return LintResult([], 0, 0, errors)
+    changed: Optional[Set[str]] = None
+    if changed_only:
+        changed, errs = changed_files(root, diff_base)
+        if errs:
+            return LintResult([], 0, 0, errs)
+
+    # phase 1: parse everything; the repo model needs the full scan set
+    # even when only a subset gets reported
     findings: List[Finding] = []
     suppressed = 0
+    entries = []  # (model, by_line) for files that made it past parsing
     for rel in files:
         with open(os.path.join(root, rel), encoding="utf-8") as fh:
             source = fh.read()
-        fs, sup = lint_source(source, rel, cfg, select, ignore)
+        model, parse_findings, by_line = _parse_one(source, rel, cfg)
+        if changed is None or rel in changed:
+            findings.extend(parse_findings)
+        if model is not None:
+            entries.append((model, by_line))
+    repo = RepoModel([m for m, _ in entries], cfg)
+
+    # phase 2: rules, with the interprocedural layer attached
+    for model, by_line in entries:
+        if changed is not None and model.path not in changed:
+            continue
+        fs, sup = _run_rules(model, cfg, select, ignore, by_line)
         findings.extend(fs)
         suppressed += sup
-    return LintResult(findings, suppressed, len(files), [])
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    result = LintResult(findings, suppressed, len(files), [])
+    if want_lock_graph:
+        result.lock_graph = repo.lock_graph()
+        result.lock_graph_dot = repo.lock_graph_dot()
+    return result

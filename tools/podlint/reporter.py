@@ -1,10 +1,16 @@
-"""Rendering: ``file:line:col: CODE message`` lines plus a summary,
-optionally mirrored to a report file (the CI artifact)."""
+"""Rendering: ``file:line:col: CODE message`` lines plus a summary
+(optionally mirrored to a report file, the CI artifact), or SARIF 2.1.0
+for GitHub code-scanning annotations (``--format sarif``)."""
 from __future__ import annotations
 
+import json
 from typing import Optional
 
 from .engine import LintResult
+from .rules import REGISTRY
+
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                "master/Schemata/sarif-schema-2.1.0.json")
 
 
 def render(result: LintResult, *, command: str = "") -> str:
@@ -17,9 +23,48 @@ def render(result: LintResult, *, command: str = "") -> str:
     return "\n".join(lines)
 
 
+def render_sarif(result: LintResult) -> str:
+    """SARIF 2.1.0 — the minimal shape github/codeql-action/upload-sarif
+    turns into PR annotations."""
+    rules = [{"id": code,
+              "shortDescription": {"text": cls.summary},
+              "defaultConfiguration": {"level": "error"}}
+             for code, cls in sorted(REGISTRY.items())]
+    rules.append({"id": "PL000",
+                  "shortDescription": {"text": "parse error"},
+                  "defaultConfiguration": {"level": "error"}})
+    results = [{
+        "ruleId": f.code,
+        "level": "error",
+        "message": {"text": f.message},
+        "locations": [{
+            "physicalLocation": {
+                "artifactLocation": {"uri": f.path,
+                                     "uriBaseId": "SRCROOT"},
+                "region": {"startLine": f.line, "startColumn": f.col},
+            }}],
+    } for f in result.findings]
+    doc = {
+        "$schema": SARIF_SCHEMA,
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "podlint",
+                "informationUri":
+                    "https://example.invalid/tools/podlint/README.md",
+                "rules": rules,
+            }},
+            "originalUriBaseIds": {"SRCROOT": {"uri": "file:///"}},
+            "results": results,
+        }],
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)
+
+
 def emit(result: LintResult, *, report_path: Optional[str] = None,
-         command: str = "") -> str:
-    text = render(result, command=command)
+         command: str = "", fmt: str = "text") -> str:
+    text = (render_sarif(result) if fmt == "sarif"
+            else render(result, command=command))
     if report_path:
         with open(report_path, "w", encoding="utf-8") as fh:
             fh.write(text + "\n")

@@ -13,6 +13,7 @@ import dataclasses
 from typing import ClassVar, Dict, Iterator, List, Optional, Set, Tuple, Type
 
 from .analysis import ModuleModel, dotted_name
+from .crossmodule import PL007_DEFAULTS, PL008_DEFAULTS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,12 +207,18 @@ class UseAfterDonate(Rule):
 
     def check(self, model, cfg):
         extra: Dict[str, Set[int]] = {}
+        if model.repo is not None:
+            # attributes holding a donating program, inferred repo-wide
+            # (e.g. `self._advance = _advance_for(...)`)
+            extra.update(model.repo.donating_attrs)
         for spec in cfg["donating"]:
             name, _, nums = str(spec).partition(":")
             extra[name] = ({int(p) for p in nums.split(",") if p.strip()}
                            or {0})
+        returns = (model.repo.returns_donating
+                   if model.repo is not None else {})
         for info in model.functions.values():
-            yield from self._check_function(model, info.node, extra)
+            yield from self._check_function(model, info.node, extra, returns)
 
     # -- helpers -------------------------------------------------------------
     @staticmethod
@@ -235,8 +242,10 @@ class UseAfterDonate(Rule):
             return {0}  # unresolvable expression: assume arg 0
         return None
 
-    def _check_function(self, model, fn, extra) -> Iterator[Finding]:
+    def _check_function(self, model, fn, extra, returns=None
+                        ) -> Iterator[Finding]:
         donating: Dict[str, Set[int]] = dict(extra)
+        returns = returns or {}
         consumed: Dict[str, Tuple[str, int]] = {}  # name -> (callee, line)
 
         def scan_expr(node: ast.AST) -> Iterator[Finding]:
@@ -288,6 +297,15 @@ class UseAfterDonate(Rule):
                         if isinstance(t, ast.Name):
                             donating[t.id] = self._donated_positions(
                                 stmt.value)
+                elif isinstance(stmt.value, ast.Call):
+                    # `advance = self._advance_fn()` where _advance_fn
+                    # is known (repo-wide) to return a donating program
+                    _, last = callee_name(stmt.value)
+                    pos = returns.get(last or "")
+                    if pos:
+                        for t in stmt.targets:
+                            if isinstance(t, ast.Name):
+                                donating[t.id] = pos
                 for t in stmt.targets:
                     bind(t)
             elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
@@ -354,6 +372,7 @@ class HostSyncInHotPath(Rule):
         sync_methods = set(cfg["sync_methods"])
         sync_builtins = set(cfg["sync_builtins"])
         for info in model.traced_functions():
+            static = self._static_names(info.node)
             for node in self._own_nodes(info.node):
                 if not isinstance(node, ast.Call):
                     continue
@@ -365,7 +384,8 @@ class HostSyncInHotPath(Rule):
                 if last in sync_methods and len(parts) > 1:
                     hit = f".{last}()"
                 elif (len(parts) == 1 and parts[0] in sync_builtins
-                      and node.args and not self._static_arg(node.args[0])):
+                      and node.args
+                      and not self._static_arg(node.args[0], static)):
                     hit = f"{parts[0]}()"
                 elif (len(parts) == 2 and parts[0] in model.np_aliases
                       and parts[1] in ("asarray", "array")):
@@ -381,13 +401,37 @@ class HostSyncInHotPath(Rule):
                         f"values on device; convert outside the trace)")
 
     @staticmethod
-    def _static_arg(arg: ast.AST) -> bool:
-        """float(x.shape[0]) and friends are trace-time constants."""
+    def _static_arg(arg: ast.AST, static: Set[str] = frozenset()) -> bool:
+        """float(x.shape[0]) and friends are trace-time constants — as
+        are names derived from them (``B, S, d = x.shape; int(B * S)``)."""
         if isinstance(arg, ast.Constant):
             return True
-        return any(isinstance(n, ast.Attribute)
-                   and n.attr in HostSyncInHotPath._STATIC_ATTRS
-                   for n in ast.walk(arg))
+        return any(
+            (isinstance(n, ast.Attribute)
+             and n.attr in HostSyncInHotPath._STATIC_ATTRS)
+            or (isinstance(n, ast.Name) and n.id in static)
+            for n in ast.walk(arg))
+
+    @staticmethod
+    def _static_names(fn: ast.AST) -> Set[str]:
+        """Names assigned from shape-derived (trace-time constant)
+        expressions — a fixpoint mirroring PL005's taint, with the
+        opposite sign."""
+        static: Set[str] = set()
+        changed = True
+        while changed:
+            changed = False
+            for node in HostSyncInHotPath._own_nodes(fn):
+                if not isinstance(node, ast.Assign):
+                    continue
+                if not HostSyncInHotPath._static_arg(node.value, static):
+                    continue
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name) and n.id not in static:
+                            static.add(n.id)
+                            changed = True
+        return static
 
     @staticmethod
     def _own_nodes(fn: ast.AST) -> Iterator[ast.AST]:
@@ -462,8 +506,20 @@ class TracerBranch(Rule):
                             changed = True
         return tainted
 
+    @staticmethod
+    def _walk_pruned(node: ast.AST) -> Iterator[ast.AST]:
+        """ast.walk, but subtrees rooted at a trace-time-constant
+        attribute (``q.shape[1] > 1``) are skipped — reading an array's
+        shape/dtype is a static test even when the array is traced."""
+        if (isinstance(node, ast.Attribute)
+                and node.attr in HostSyncInHotPath._STATIC_ATTRS):
+            return
+        yield node
+        for child in ast.iter_child_nodes(node):
+            yield from TracerBranch._walk_pruned(child)
+
     def _is_arrayish(self, model, expr, tainted) -> bool:
-        for n in ast.walk(expr):
+        for n in self._walk_pruned(expr):
             if isinstance(n, ast.Call):
                 name = dotted_name(n.func)
                 if name and name.split(".")[0] in model.jnp_aliases:
@@ -485,7 +541,7 @@ class TracerBranch(Rule):
                 return None
             if name and name.split(".")[0] in model.jnp_aliases:
                 return f"`{ast.unparse(test)}` (a jnp array)"
-        for n in ast.walk(test):
+        for n in self._walk_pruned(test):
             if isinstance(n, ast.Call):
                 name = dotted_name(n.func)
                 if name and name.split(".")[0] in model.jnp_aliases:
@@ -554,3 +610,101 @@ class MetricInTrace(Rule):
                         f"({info.traced_via}) — a span under a trace "
                         f"times the tracer, then never fires again "
                         f"(wrap the host call site instead)")
+
+
+# ---------------------------------------------------------------------------
+# PL007 — lock-order inversion (interprocedural, repo-wide)
+# ---------------------------------------------------------------------------
+
+
+@register
+class LockOrderInversion(Rule):
+    """A cycle in the static acquired-before graph.
+
+    The graph's nodes are lock identities (``ClassName.attr``, or the
+    string passed to ``concurrency.make_lock``); an edge A -> B means
+    some code path acquires B while holding A — either a lexically
+    nested ``with``, or a call (possibly through several modules) into
+    a function that acquires B.  Two threads walking a cycle's edges in
+    different orders deadlock; PR 5's put-vs-migrate hang was exactly
+    the ``PodRouter._lock -> TaggedBuffer._lock`` edge meeting its
+    reverse.  The full graph ships as the ``lockgraph.json`` / DOT
+    artifact (``--lock-graph``, ``make analyze``); the runtime half is
+    ``repro.concurrency.lockdep`` (DESIGN.md §14).
+    """
+
+    code = "PL007"
+    summary = "lock-order inversion: cycle in the acquired-before graph"
+    defaults: ClassVar[Dict[str, object]] = dict(PL007_DEFAULTS)
+
+    def check(self, model, cfg):
+        if model.repo is None:
+            return
+        for cyc in model.repo.lock_cycles():
+            anchor = cyc["anchor"]
+            if anchor["path"] != model.path:
+                continue  # reported once, in the anchor-site's module
+            order = " ; ".join(
+                f'{e["src"]} -> {e["dst"]} ({e["path"]}:{e["line"]})'
+                for e in cyc["edges"])
+            node = ast.Module(body=[], type_ignores=[])  # line carrier
+            node.lineno, node.col_offset = anchor["line"], 0
+            yield self.finding(
+                model, node,
+                f"lock-order-inversion: the acquired-before graph has a "
+                f"cycle over {{{', '.join(cyc['locks'])}}}: {order} — "
+                f"two threads taking these locks in different orders "
+                f"deadlock; pick one global order and restructure the "
+                f"odd path out")
+
+
+# ---------------------------------------------------------------------------
+# PL008 — blocking call under a lock, interprocedural
+# ---------------------------------------------------------------------------
+
+
+@register
+class BlockingReachableUnderLock(Rule):
+    """Calls that *transitively* block while a lock is held.
+
+    PL002 sees ``buffer.put(...)`` lexically inside ``with lock:`` —
+    but not ``self._enqueue(sid)`` where ``_enqueue`` (possibly in
+    another module) is the thing that calls ``put``.  This rule walks
+    the repo call graph: a function is *blocking* if it contains a
+    blocking primitive or calls a blocking function; invoking one with
+    any lock held is flagged, with the full witness chain down to the
+    primitive.  Raw primitives under a lexical lock stay PL002's
+    finding — each defect is reported by exactly one rule.
+
+    Closures defined under ``with lock:`` and invoked in the same
+    region resolve like any other callee, which closes PL002's
+    nested-def blind spot.  ``cond.wait[_for]`` on the sole held lock
+    is exempt (the wait releases it); waiting while *another* lock is
+    also held is flagged — that lock stays held for the wait's
+    unbounded duration.
+    """
+
+    code = "PL008"
+    summary = "call that transitively blocks while a lock is held"
+    defaults: ClassVar[Dict[str, object]] = dict(PL008_DEFAULTS)
+
+    def check(self, model, cfg):
+        if model.repo is None:
+            return
+        for ev in model.repo.region_data(model)[1]:
+            held = ", ".join(f"`{h}`" for h in ev.held)
+            if ev.kind == "blocking":
+                yield self.finding(
+                    model, ev.node,
+                    f"blocking-under-lock: call into `{ev.target}` may "
+                    f"block ({ev.chain}) while {held} is held — a "
+                    f"waiter that needs that lock to free capacity "
+                    f"deadlocks (move the call outside the critical "
+                    f"section)")
+            elif ev.kind == "wait-extra":
+                yield self.finding(
+                    model, ev.node,
+                    f"blocking-under-lock: waiting on condition "
+                    f"`{ev.target}` releases only its own lock — "
+                    f"{held} stays held for the wait's unbounded "
+                    f"duration (drop the outer lock first)")

@@ -1,0 +1,35 @@
+"""PL007 fixture: two classes acquire each other's locks in opposite
+orders — a cycle in the acquired-before graph."""
+import threading
+
+
+class Alpha:
+    peer: "Beta"
+
+    def __init__(self, peer: "Beta"):
+        self._lock = threading.Lock()
+        self.peer = peer
+
+    def admit(self, item):
+        with self._lock:
+            self.stash = item
+
+    def drain(self):
+        with self._lock:
+            self.peer.push(0)  # Alpha._lock -> Beta._lock
+
+
+class Beta:
+    peer: "Alpha"
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.peer = None
+
+    def push(self, item):
+        with self._lock:
+            self.stash = item
+
+    def forward(self, item):
+        with self._lock:
+            self.peer.admit(item)  # Beta._lock -> Alpha._lock: inversion

@@ -1,0 +1,31 @@
+"""PL007 repaired form: every path takes Alpha's lock before Beta's —
+one global order, no cycle."""
+import threading
+
+
+class Alpha:
+    peer: "Beta"
+
+    def __init__(self, peer: "Beta"):
+        self._lock = threading.Lock()
+        self.peer = peer
+
+    def admit(self, item):
+        with self._lock:
+            self.peer.push(item)  # Alpha._lock -> Beta._lock
+
+    def drain(self):
+        with self._lock:
+            self.peer.push(0)  # same direction: fine
+
+
+class Beta:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def push(self, item):
+        with self._lock:
+            self.stash = item
+
+    def forward(self, item):
+        self.push(item)  # no foreign lock held: no new edge

@@ -1,0 +1,24 @@
+"""PL008 fixture: the blocking call is one hop away from the lock —
+lexically invisible to PL002, reachable through the call graph."""
+import queue
+import threading
+
+
+class Router:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._aux = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._q = queue.Queue(maxsize=4)
+
+    def _enqueue(self, item):
+        self._q.put(item)  # blocks when the queue is full
+
+    def admit(self, item):
+        with self._lock:
+            self._enqueue(item)  # transitively blocking under the lock
+
+    def drain(self):
+        with self._aux:
+            with self._lock:
+                self._cond.wait()  # releases _lock only; _aux stays held

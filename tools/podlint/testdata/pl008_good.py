@@ -1,0 +1,23 @@
+"""PL008 repaired form: the enqueue happens outside the critical
+section, and the wait holds only the condition's own lock."""
+import queue
+import threading
+
+
+class Router:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._q = queue.Queue(maxsize=4)
+
+    def _enqueue(self, item):
+        self._q.put(item)
+
+    def admit(self, item):
+        with self._lock:
+            staged = item
+        self._enqueue(staged)  # no lock held: blocking is fine
+
+    def drain(self):
+        with self._lock:
+            self._cond.wait()  # sole held lock: the wait releases it

@@ -1,0 +1,16 @@
+"""PL008 closure fixture: the blocking primitive hides in a nested def
+invoked under the lock — PL002's lexical walk skips nested function
+bodies, so only the interprocedural rule can see it."""
+import threading
+
+
+class Drainer:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def flush(self, worker):
+        def handoff():
+            worker.join()  # blocking, but in a closure
+
+        with self._lock:
+            handoff()  # the closure runs here, lock held

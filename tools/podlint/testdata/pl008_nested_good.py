@@ -1,0 +1,16 @@
+"""Repaired closure fixture: the closure (and its blocking join) runs
+after the critical section."""
+import threading
+
+
+class Drainer:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def flush(self, worker):
+        def handoff():
+            worker.join()
+
+        with self._lock:
+            self.draining = True
+        handoff()  # lock released first

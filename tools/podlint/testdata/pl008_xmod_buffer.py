@@ -1,0 +1,23 @@
+"""Cross-module PL008 fixture, buffer half: a minimised block-policy
+TaggedBuffer.  ``feed`` blocks on capacity via a condition wait."""
+import threading
+
+
+class MiniBuffer:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._items: list = []
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+
+    def feed(self, row):
+        with self._lock:
+            while len(self._items) >= self.capacity:
+                self._not_full.wait()  # blocks until space frees up
+            self._items.append(row)
+
+    def take(self):
+        with self._lock:
+            row = self._items.pop(0)
+            self._not_full.notify()
+            return row

@@ -1,0 +1,25 @@
+"""Cross-module PL008 fixture, router half: the PR 5 deadlock shape,
+minimised to two files.  ``put`` holds the router lock across
+``_enqueue``, which calls into the *other module's* ``MiniBuffer.feed``
+— a blocking wait the lexical rule (PL002) cannot see.  The thing that
+frees buffer space mid-handoff needs this same router lock: deadlock."""
+import threading
+from typing import Dict
+
+from pl008_xmod_buffer import MiniBuffer
+
+
+class MiniRouter:
+    def __init__(self, pods):
+        self._lock = threading.Lock()
+        self._buffers: Dict[int, MiniBuffer] = {
+            pid: MiniBuffer(4) for pid in pods}
+        self._table: Dict[int, int] = {}
+
+    def _enqueue(self, pid, row):
+        self._buffers[pid].feed(row)
+
+    def put(self, sid, row):
+        with self._lock:
+            pid = self._table.setdefault(sid, sid % len(self._buffers))
+            self._enqueue(pid, row)  # blocks cross-module under the lock
