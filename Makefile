@@ -3,8 +3,9 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: verify verify-lockdep lint analyze bench-oracle bench-serve \
-	bench-ingest bench-autoscale bench-podstep bench-obs bench-gate bench
+.PHONY: verify verify-lockdep lint analyze docs-check bench-oracle \
+	bench-serve bench-ingest bench-autoscale bench-podstep bench-obs \
+	bench-shed bench-gate bench
 
 # tier-1: the gate every PR must keep green.  JUNIT=<path> additionally
 # writes a junit XML report; OBS_DUMP=<dir> dumps the suite's telemetry
@@ -37,7 +38,12 @@ analyze:
 # a dynamic proof the static lockgraph is honest (DESIGN.md §14)
 verify-lockdep:
 	REPRO_LOCKDEP=1 python -m pytest -x -q tests/test_ingest.py \
-		tests/test_autoscale.py tests/test_obs.py
+		tests/test_pubsub.py tests/test_autoscale.py tests/test_obs.py
+
+# docs front door: every relative link in README.md/docs/DESIGN.md
+# resolves and every `make <target>` the docs mention exists here
+docs-check:
+	python -m tools.check_docs
 
 # GainOracle backend A/B sweep -> BENCH_oracle.json
 bench-oracle:
@@ -64,11 +70,15 @@ bench-podstep:
 bench-obs:
 	python -m benchmarks.obs_bench --smoke --json BENCH_obs.json
 
+# watermark shed ladder under 2-10x overload -> BENCH_shed.json
+bench-shed:
+	python -m benchmarks.shed_bench --smoke --json BENCH_shed.json
+
 # bench-regression gate: diff the fresh BENCH_*.json in the working tree
 # against the committed baselines (git HEAD); >25% slowdown fails.
 # CI runs one file per matrix job: make bench-gate BENCHES=BENCH_serve.json
 BENCHES ?= BENCH_oracle.json BENCH_serve.json BENCH_ingest.json \
-	BENCH_autoscale.json BENCH_podstep.json BENCH_obs.json
+	BENCH_autoscale.json BENCH_podstep.json BENCH_obs.json BENCH_shed.json
 bench-gate:
 	python -m benchmarks.check_regression --fresh $(BENCHES) --from-git HEAD
 

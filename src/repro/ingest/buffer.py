@@ -22,6 +22,19 @@ Drops are counted **per session** — under summarization, losing items
 is semantically fine (the algorithms subsample by design) but losing
 them *silently and unevenly* is not.
 
+Ahead of the capacity wall sit two admission policies (``repro.ingest.
+shedding``): an optional per-session token-bucket ``rate_limit``
+(items a hot producer sends beyond its budget are *throttled*) and an
+optional ``shed`` watermark ladder that escalates admit-all ->
+Bernoulli subsampling (1802.07098) -> Stream Clipper-style
+two-threshold clipping (1606.00389) as fill crosses watermarks.  Their
+ledgers (``throttled``, ``sheds``, per-policy shed counts) are kept
+strictly separate from the overflow ``drops`` ledger: a shed is a
+*policy* outcome with a stated guarantee, an overflow drop is the
+accident the policies exist to prevent — ``drops_total{layer,reason}``
+stays truthful because the two never mix (``total_drops()`` counts
+overflow only; ``total_sheds()``/``total_throttled()`` the rest).
+
 Fairness: items live in per-session FIFO queues; ``get`` drains them
 round-robin, one item per live session per turn.  Per-session order is
 therefore preserved end-to-end (the pod's routing contract); global
@@ -40,26 +53,41 @@ from __future__ import annotations
 
 import collections
 import threading
-from typing import Dict, Optional, Tuple
+import time
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.concurrency import make_lock
+
+from .shedding import RateLimit, ShedPolicy, TokenBucket
 
 POLICIES = ("block", "drop-newest", "drop-oldest")
 PAD_SID = -1  # the pod's queue-padding sentinel
 
 
 class TaggedBuffer:
-    """Bounded, thread-safe, per-session-fair tagged item buffer."""
+    """Bounded, thread-safe, per-session-fair tagged item buffer.
 
-    def __init__(self, capacity: int, policy: str = "block"):
+    ``rate_limit`` installs a default per-session token bucket
+    (override per sid via :meth:`set_rate_limit`); ``shed`` installs
+    the watermark shedding ladder; ``clock`` injects time for the
+    buckets (tests pin it — production uses ``time.monotonic``).
+    """
+
+    def __init__(self, capacity: int, policy: str = "block", *,
+                 rate_limit: Optional[RateLimit] = None,
+                 shed: Optional[ShedPolicy] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.capacity = capacity
         self.policy = policy
+        self.rate_limit = rate_limit
+        self.shed = shed
+        self._clock = clock
         self._q: "collections.OrderedDict[int, collections.deque]" = \
             collections.OrderedDict()  # sid -> FIFO of (d,) float32 rows
         self._size = 0
@@ -68,7 +96,16 @@ class TaggedBuffer:
         self._lock = make_lock("TaggedBuffer._lock")
         self._not_full = threading.Condition(self._lock)
         self._not_empty = threading.Condition(self._lock)
-        self.drops: Dict[int, int] = {}  # sid -> items clipped
+        self.drops: Dict[int, int] = {}  # sid -> items clipped (overflow)
+        # the admission-policy ledgers — deliberate, per-policy losses,
+        # NEVER mixed into ``drops`` (see module docstring)
+        self.sheds: Dict[int, int] = {}  # sid -> items shed by the ladder
+        self.throttled: Dict[int, int] = {}  # sid -> items rate-limited
+        self._shed_by_policy: Dict[str, int] = {}  # rung -> items shed
+        self._rung = "admit"
+        self._rung_changes = 0
+        self._buckets: Dict[int, TokenBucket] = {}
+        self._rate_overrides: Dict[int, RateLimit] = {}
 
     # ------------------------------------------------------------- properties
     @property
@@ -86,12 +123,60 @@ class TaggedBuffer:
             return dict(self.drops)
 
     def total_drops(self) -> int:
-        """Lifetime items clipped, all sessions — monotone by
-        construction (``drops`` only ever grows), so the telemetry
-        drain (``repro.obs.drain.drain_buffer``) can snapshot it as a
-        counter without per-call bookkeeping."""
+        """Lifetime items clipped by the *overflow* policy, all
+        sessions — monotone by construction (``drops`` only ever
+        grows), so the telemetry drain
+        (``repro.obs.drain.drain_buffer``) can snapshot it as a counter
+        without per-call bookkeeping.  Deliberate losses (shed-ladder
+        sheds, rate-limit throttles) are NOT included — they have their
+        own ledgers (``total_sheds``/``total_throttled``) and their own
+        metric families, so ``drops_total{layer="buffer",
+        reason="clipped"}`` keeps meaning what it always meant."""
         with self._lock:
             return sum(self.drops.values())
+
+    def shed_counts(self) -> Dict[int, int]:
+        with self._lock:
+            return dict(self.sheds)
+
+    def total_sheds(self) -> int:
+        """Lifetime items shed by the watermark ladder (all rungs)."""
+        with self._lock:
+            return sum(self.sheds.values())
+
+    def shed_policy_counts(self) -> Dict[str, int]:
+        """Lifetime sheds by ladder rung (``subsample`` / ``clip``) —
+        the ``shed_total{policy,...}`` drain source."""
+        with self._lock:
+            return dict(self._shed_by_policy)
+
+    def throttled_counts(self) -> Dict[int, int]:
+        with self._lock:
+            return dict(self.throttled)
+
+    def total_throttled(self) -> int:
+        """Lifetime items refused by per-session token buckets."""
+        with self._lock:
+            return sum(self.throttled.values())
+
+    def shed_rung(self) -> str:
+        """The ladder rung the last admission decision ran under
+        (``admit`` when no shed policy is installed)."""
+        with self._lock:
+            return self._rung
+
+    def shed_rung_changes(self) -> int:
+        """Lifetime rung transitions — escalations are control-plane
+        events worth a counter, not one span per item."""
+        with self._lock:
+            return self._rung_changes
+
+    def set_rate_limit(self, sid: int, limit: Optional[RateLimit]) -> None:
+        """Override the default ``rate_limit`` for one session
+        (``None`` = unlimited for that session, whatever the default)."""
+        with self._lock:
+            self._rate_overrides[int(sid)] = limit
+            self._buckets.pop(int(sid), None)  # re-built at next put
 
     def depths(self) -> Dict[int, int]:
         """Per-session queue depth — the autoscaler's load signal (and
@@ -159,20 +244,59 @@ class TaggedBuffer:
         return np.asarray(out_s, np.int32), out_x
 
     # --------------------------------------------------------------- producer
-    def put(self, sids, X, timeout: Optional[float] = None) -> int:
-        """Enqueue a tagged batch; returns the number of items dropped.
+    def _admit_rate(self, sid: int, now: float) -> bool:
+        """Token-bucket check for one arriving item (under the lock)."""
+        limit = self._rate_overrides.get(sid, self.rate_limit)
+        if limit is None:
+            return True
+        bucket = self._buckets.get(sid)
+        if bucket is None:
+            bucket = self._buckets[sid] = TokenBucket(limit, now)
+        return bucket.allow(now)
 
-        ``block`` waits for room (``timeout`` seconds per stalled item,
-        None = forever) and raises ``TimeoutError`` on expiry; the drop
-        policies never wait.  Raises ``ValueError`` after ``close()``.
+    def _admit_shed(self, sid: int) -> bool:
+        """Watermark-ladder check for one arriving item (under the
+        lock); counts the shed and the rung transition if any."""
+        ok, rung = self.shed.decide(
+            size=self._size, capacity=self.capacity,
+            depth=len(self._q[sid]) if sid in self._q else 0,
+            n_live=len(self._q))
+        if rung != self._rung:
+            self._rung = rung
+            self._rung_changes += 1
+        if not ok:
+            self.sheds[sid] = self.sheds.get(sid, 0) + 1
+            self._shed_by_policy[rung] = \
+                self._shed_by_policy.get(rung, 0) + 1
+        return ok
+
+    def put(self, sids, X, timeout: Optional[float] = None) -> int:
+        """Enqueue a tagged batch; returns the number of items *not*
+        admitted (rate-limit throttles + ladder sheds + overflow drops
+        — each counted in its own ledger).
+
+        Admission order per item: token bucket (throttle), shed ladder
+        (policy shed), then capacity.  ``block`` waits for room
+        (``timeout`` seconds per stalled item, None = forever) and
+        raises ``TimeoutError`` on expiry; the drop policies never
+        wait.  Raises ``ValueError`` after ``close()``.
         """
         sids = np.asarray(sids, np.int32).ravel()
         X = np.asarray(X, np.float32)
         dropped = 0
+        now = self._clock() if self.rate_limit or self._rate_overrides \
+            else 0.0
         with self._lock:
             for sid, row in zip(sids.tolist(), X):
                 if self._closed:
                     raise ValueError("put() on a closed TaggedBuffer")
+                if not self._admit_rate(sid, now):
+                    self.throttled[sid] = self.throttled.get(sid, 0) + 1
+                    dropped += 1
+                    continue
+                if self.shed is not None and not self._admit_shed(sid):
+                    dropped += 1
+                    continue
                 if self._size >= self.capacity:
                     if self.policy == "block":
                         if not self._not_full.wait_for(

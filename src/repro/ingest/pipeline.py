@@ -114,6 +114,12 @@ class IngestPipeline:
     # full jitted step per item; 1 favors latency)
     pod_id: "object" = 0  # telemetry label; PodRouter stamps its key here
     metrics: "object" = None  # None = process default registry; obs.NULL off
+    # host callback fired at run()'s sync boundary (after
+    # block_until_ready, state fully materialized); a returned dict is
+    # merged into run()'s stats.  The pubsub front-end hooks its offset
+    # commit here (PubSubFrontEnd.attach) — the boundary is what makes
+    # "committed" mean "in the pod state".
+    on_sync: "object" = None
 
     def __post_init__(self):
         if (self.source is None) == (self.buffer is None):
@@ -252,15 +258,21 @@ class IngestPipeline:
         # costs a few already-materialized (S,) transfers and zero hot-path
         # work (DESIGN.md §13 "record at sync boundaries only")
         self._record_run(state, batches, items, padded, wall)
+        stats = {"batches": batches, "items": items,
+                 "padded": padded, "wall_s": wall,
+                 "dropped_unknown": drop_unknown,
+                 "dropped_overflow": drop_overflow}
+        if self.on_sync is not None:
+            # same sync boundary as the drain: everything this run
+            # routed is in the pod state, so offset commits made here
+            # are exact (a crash before this point only re-delivers)
+            stats.update(self.on_sync(state) or {})
         if self._feed_exc is not None:
             exc, self._feed_exc = self._feed_exc, None
             raise RuntimeError(
                 "ingest producer failed mid-stream (items already routed "
                 "are in the pod state)") from exc
-        return state, {"batches": batches, "items": items,
-                       "padded": padded, "wall_s": wall,
-                       "dropped_unknown": drop_unknown,
-                       "dropped_overflow": drop_overflow}
+        return state, stats
 
     def _record_run(self, state, batches, items, padded, wall) -> None:
         """Flush one run()'s host-local tallies + the device ledgers into

@@ -47,6 +47,10 @@ from .registry import get_registry
 DROPS_HELP = ("items dropped anywhere in the serving stack, by layer "
               "(router front-end / ingest buffer / pod routing) and cause")
 
+#: ladder rung -> gauge value (mirrors repro.ingest.shedding.RUNGS,
+#: duplicated here so obs never imports the ingest layer)
+SHED_RUNG_INDEX = {"admit": 0, "subsample": 1, "clip": 2}
+
 
 def observe_total(name: str, labels: Dict[str, str], total: float, *,
                   help: str = "", registry=None) -> float:
@@ -114,8 +118,27 @@ def drain_pod(state, *, pod: str, registry=None) -> None:
         pod=pod).set(float(active.mean()) if active.size else 0.0)
 
 
+SHED_HELP = ("items shed by the buffer's watermark ladder, by rung "
+             "(subsample = Bernoulli thinning of over-share tenants, "
+             "clip = two-threshold clipping) — deliberate policy losses, "
+             "kept OUT of drops_total so overflow stays an accident signal")
+THROTTLE_HELP = "items refused by per-session token-bucket rate limits"
+
+#: every ladder rung that sheds — registered at zero on each drain so a
+#: dashboard shows shed_total{policy=...} = 0, not a hole until overload
+SHED_POLICIES = ("subsample", "clip")
+
+
 def drain_buffer(buffer, *, pod: str, registry=None) -> None:
-    """Harvest a ``TaggedBuffer``'s ledgers (host-side; no device I/O)."""
+    """Harvest a ``TaggedBuffer``'s ledgers (host-side; no device I/O).
+
+    ``drops_total{layer="buffer", reason="clipped"}`` counts *overflow*
+    drops only; the admission policies' deliberate losses go to their
+    own families (``shed_total{policy,pod}``,
+    ``ratelimit_throttled_total{pod}``) so the PR 8 unification stays
+    truthful — a rising drops_total still means something went wrong,
+    a rising shed_total means the ladder is doing its job.
+    """
     reg = get_registry(registry)
     if not reg.enabled:
         return
@@ -123,6 +146,18 @@ def drain_buffer(buffer, *, pod: str, registry=None) -> None:
     observe_total("drops_total",
                   {"layer": "buffer", "reason": "clipped", "pod": pod},
                   buffer.total_drops(), help=DROPS_HELP, registry=reg)
+    by_policy = buffer.shed_policy_counts()
+    for policy in SHED_POLICIES:
+        observe_total("shed_total", {"policy": policy, "pod": pod},
+                      by_policy.get(policy, 0), help=SHED_HELP,
+                      registry=reg)
+    observe_total("ratelimit_throttled_total", {"pod": pod},
+                  buffer.total_throttled(), help=THROTTLE_HELP,
+                  registry=reg)
+    reg.gauge("buffer_shed_rung",
+              "current ladder rung (0 admit / 1 subsample / 2 clip)",
+              ("pod",)).labels(pod=pod).set(
+        SHED_RUNG_INDEX.get(buffer.shed_rung(), 0))
     reg.gauge("buffer_depth_items", "buffered items awaiting the pod",
               ("pod",)).labels(pod=pod).set(buffer.size)
     reg.gauge("buffer_quiesced_sessions",

@@ -514,7 +514,11 @@ class SummarizerPod:
         the pipeline at a safe point and runs ``drift_check`` (resets do
         not move slots, so the pipeline's host slot table stays valid).
         Returns ``(state, stats)`` with the pipeline's throughput/drop
-        stats.
+        stats; with a pub/sub front-end attached to the pipeline
+        (``PubSubFrontEnd.attach``), stats also carries
+        ``pubsub_committed`` — the partition -> offset map committed at
+        the last sync boundary, i.e. exactly where a restarted serve
+        loop resumes (``PubSubFrontEnd(start=...)``).
         """
         if drift_every and drift_every > 0:
             # serve() is resumable — don't retrace drift per call
@@ -526,7 +530,13 @@ class SummarizerPod:
                      else min(drift_every, remaining))
                 state, stats = pipeline.run(state, max_batches=n)
                 for k, v in stats.items():
-                    total[k] = total.get(k, 0) + v
+                    if isinstance(v, dict):
+                        # non-additive stats (e.g. pubsub_committed —
+                        # the offset map from the pipeline's on_sync
+                        # commit): latest wins, offsets are monotone
+                        total[k] = v
+                    else:
+                        total[k] = total.get(k, 0) + v
                 # host-side control plane between pipeline runs — safe to
                 # span here (the drift program itself stays untouched)
                 with obs.span("drift_reset", pod=str(pipeline.pod_id),

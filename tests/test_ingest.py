@@ -23,8 +23,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.api import make
-from repro.ingest import (PAD_SID, DriftSource, IngestPipeline, ReplaySource,
-                          SocketSource, SubsampleSource, TaggedBuffer,
+from repro.ingest import (PAD_SID, DriftSource, IngestPipeline, RateLimit,
+                          ReplaySource, ShedPolicy, SocketSource,
+                          SubsampleSource, TaggedBuffer, TokenBucket,
                           connect_producer, host_route, send_frame)
 from repro.serve import SummarizerPod
 
@@ -195,6 +196,86 @@ def test_buffer_drop_oldest_clips_the_longest_queue():
     np.testing.assert_array_equal(sorted(s.tolist()), [7, 7, 8, 8])
     sev = x[s == 7][:, 0]
     np.testing.assert_array_equal(sev, [1.0, 2.0])  # head (0.0) clipped
+
+
+def test_token_bucket_refills_against_injected_clock():
+    b = TokenBucket(RateLimit(rate=2.0, burst=2.0), now=0.0)
+    assert b.allow(0.0) and b.allow(0.0)  # burst spent
+    assert not b.allow(0.0)
+    assert not b.allow(0.4)  # 0.8 tokens — still short
+    assert b.allow(0.5)  # 1.0 token refilled
+    assert b.allow(10.0) and b.allow(10.0)  # refill caps at burst
+    assert not b.allow(10.0)
+
+
+def test_buffer_rate_limit_throttles_and_counts_separately():
+    clock = [0.0]
+    buf = TaggedBuffer(capacity=64, rate_limit=RateLimit(rate=1.0, burst=2.0),
+                       clock=lambda: clock[0])
+    sids = [1] * 5 + [2]
+    rejected = buf.put(sids, np.zeros((6, 2), np.float32))
+    assert rejected == 3  # session 1 over its burst of 2; session 2 fine
+    assert buf.throttled_counts() == {1: 3}
+    assert buf.total_throttled() == 3
+    assert buf.total_drops() == 0  # throttles are NOT overflow drops
+    assert buf.size == 3
+    clock[0] = 3.0  # three tokens refilled
+    assert buf.put([1, 1, 1], np.zeros((3, 2), np.float32)) == 1
+    assert buf.throttled_counts() == {1: 4}
+
+
+def test_buffer_per_session_rate_override():
+    clock = [0.0]
+    buf = TaggedBuffer(capacity=64, rate_limit=RateLimit(rate=1.0, burst=1.0),
+                       clock=lambda: clock[0])
+    buf.set_rate_limit(7, RateLimit(rate=100.0, burst=10.0))
+    buf.set_rate_limit(8, None)  # exempt entirely
+    rejected = buf.put([6, 6, 7, 7, 7, 8, 8, 8],
+                       np.zeros((8, 2), np.float32))
+    assert rejected == 1
+    assert buf.throttled_counts() == {6: 1}
+
+
+def test_shed_policy_ladder_rungs_and_fair_share():
+    p = ShedPolicy(lo=0.5, hi=0.8, seed=0)
+    assert p.rung(0, 100) == "admit"
+    assert p.rung(49, 100) == "admit"
+    assert p.rung(50, 100) == "subsample"
+    assert p.rung(80, 100) == "clip"
+    assert p.fair_share(100, 4) == pytest.approx(12.5)
+    assert p.fair_share(100, 0) == pytest.approx(50.0)  # empty: lo * cap
+    # under fair share every rung admits, deterministically
+    for size in (50, 90):
+        ok, rung = p.decide(size=size, capacity=100, depth=3, n_live=4)
+        assert ok and rung == ("subsample" if size < 80 else "clip")
+
+
+def test_buffer_shed_ladder_spares_under_share_sessions():
+    buf = TaggedBuffer(capacity=16, policy="drop-newest",
+                       shed=ShedPolicy(lo=0.25, hi=0.6, p_floor=0.01,
+                                       clip_mult=1.0, seed=3))
+    # hot session 0 floods; quiet session 1 trickles
+    buf.put([0] * 40, np.zeros((40, 2), np.float32))
+    buf.put([1], np.ones((1, 2), np.float32))
+    assert buf.shed_counts().get(1, 0) == 0  # quiet under share: lossless
+    assert buf.shed_counts()[0] > 0
+    assert buf.total_drops() == 0  # ladder absorbed it before capacity
+    by_policy = buf.shed_policy_counts()
+    assert set(by_policy) <= {"subsample", "clip"}
+    assert sum(by_policy.values()) == buf.total_sheds()
+    assert buf.shed_rung() in ("subsample", "clip")
+    assert buf.shed_rung_changes() >= 1
+
+
+def test_buffer_shed_counts_survive_get_and_stay_lifetime():
+    buf = TaggedBuffer(capacity=8, policy="drop-newest",
+                       shed=ShedPolicy(lo=0.25, hi=0.5, p_floor=0.01,
+                                       clip_mult=1.0, seed=0))
+    buf.put([0] * 20, np.zeros((20, 2), np.float32))
+    sheds = buf.total_sheds()
+    assert sheds > 0
+    buf.get(8)
+    assert buf.total_sheds() == sheds  # lifetime ledger, not depth
 
 
 def test_buffer_block_policy_backpressure():

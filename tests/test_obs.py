@@ -262,6 +262,55 @@ def test_drop_ledgers_unify_across_all_three_layers(fresh_obs):
     assert fam["labelnames"] == ["layer", "pod", "reason"]
 
 
+def test_sheds_and_throttles_stay_out_of_drops_total(fresh_obs):
+    """Regression for the PR 8 unification: the admission policies'
+    deliberate losses (watermark sheds, rate-limit throttles) must NOT
+    leak into ``drops_total{layer=buffer,reason=clipped}`` — that family
+    counts capacity overflow only, so it stays an accident signal.
+    Sheds land in ``shed_total{policy,pod}``, throttles in
+    ``ratelimit_throttled_total{pod}``."""
+    from repro.ingest import RateLimit, ShedPolicy, TaggedBuffer
+    reg, _ = fresh_obs
+    clock = [0.0]
+    buf = TaggedBuffer(capacity=16, policy="drop-newest",
+                       rate_limit=RateLimit(rate=1000.0, burst=8.0),
+                       shed=ShedPolicy(lo=0.25, hi=0.5, p_floor=0.01,
+                                       clip_mult=1.0, seed=0),
+                       clock=lambda: clock[0])
+    # session 1 floods: first throttled past its burst, admitted items
+    # then walk the buffer up the ladder until the clip rung sheds
+    buf.put(np.array([1] * 30, np.int32), np.zeros((30, 2), np.float32))
+    assert buf.total_throttled() > 0
+    clock[0] = 1.0  # bucket refills; now the ladder does the refusing
+    buf.put(np.array([1] * 30, np.int32), np.zeros((30, 2), np.float32))
+    assert buf.total_sheds() > 0
+    assert buf.total_drops() == 0  # neither ledger bled into overflow
+
+    obs.drain.drain_buffer(buf, pod="3")
+    snap = reg.snapshot()
+    assert snap.get("drops_total", layer="buffer", reason="clipped",
+                    pod="3") == 0
+    shed_sum = sum(snap.get("shed_total", policy=p, pod="3")
+                   for p in obs.drain.SHED_POLICIES)
+    assert shed_sum == buf.total_sheds()
+    assert snap.get("ratelimit_throttled_total",
+                    pod="3") == buf.total_throttled()
+    assert snap.get("buffer_shed_rung", pod="3") == \
+        obs.drain.SHED_RUNG_INDEX[buf.shed_rung()]
+    # per-session ledgers agree with the totals
+    assert sum(buf.shed_counts().values()) == buf.total_sheds()
+    assert sum(buf.throttled_counts().values()) == buf.total_throttled()
+    # a genuine overflow still lands in drops_total: drown a shed-free
+    # buffer (no ladder) past capacity
+    buf2 = TaggedBuffer(capacity=2, policy="drop-newest")
+    buf2.put(np.array([7, 7, 7], np.int32), np.zeros((3, 2), np.float32))
+    obs.drain.drain_buffer(buf2, pod="4")
+    snap2 = reg.snapshot()
+    assert snap2.get("drops_total", layer="buffer", reason="clipped",
+                     pod="4") == 1
+    assert snap2.get("shed_total", policy="subsample", pod="4") == 0
+
+
 def test_backend_fallback_counted_per_degrade_warned_once(fresh_obs):
     from repro.kernels.pod_step import ops
     reg, _ = fresh_obs

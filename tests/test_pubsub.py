@@ -1,0 +1,370 @@
+"""Tier-1 tests for the pub/sub front-end (repro.ingest.pubsub) and the
+admission policies it fronts (DESIGN.md §15).
+
+Pins the four contracts of the ingest edge:
+
+  * broker — hash-partitioned offset logs: stable partitioning,
+    monotone offsets, FIFO within a partition, loud failure when a
+    consumer outruns retention, commit-edge trimming;
+  * wire — the HELLO/ACK seq handshake is an exactly-once resume
+    protocol: a producer reconnect replays precisely the un-ACKed
+    frames, duplicates are detected and skipped, acks prune the replay
+    window;
+  * front-end — pump/commit two-phase offsets: delivered-but-
+    uncommitted items re-deliver after a crash (at-least-once into the
+    buffers), a successor started from ``committed()`` resumes exactly;
+  * overload — sustained 4x offered load with one hot tenant: quiet
+    tenants' summaries are BIT-EQUAL to the unloaded run (under-share
+    admission never reaches a random draw), the hot tenant degrades
+    within the subsampling bound, sheds concentrate on the hot tenant,
+    memory stays bounded, and a producer reconnect mid-overload resumes
+    offsets exactly.
+
+Socket tests carry a ``timeout`` mark and socket-level timeouts, so a
+dead peer fails fast instead of hanging CI.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import make
+from repro.ingest import (IngestPipeline, PodRouter, Publisher, PubSubBroker,
+                          PubSubFrontEnd, PubSubListener, ShedPolicy,
+                          TaggedBuffer, partition_of)
+from repro.ingest.pubsub import _read_ack, publish_frame
+from repro.serve.summarize import SummarizerPod
+
+
+# ------------------------------------------------------------------- broker
+def test_partition_of_is_stable_in_range_and_spread():
+    n = 8
+    parts = [partition_of(sid, n) for sid in range(256)]
+    assert all(0 <= p < n for p in parts)
+    assert parts == [partition_of(sid, n) for sid in range(256)]  # stable
+    assert len(set(parts)) == n  # sequential ids spread over all partitions
+
+
+def test_broker_offsets_fifo_and_read():
+    br = PubSubBroker(n_partitions=4)
+    sids = np.array([5, 5, 9, 5], np.int32)
+    X = np.arange(16, dtype=np.float32).reshape(4, 4)
+    placed = br.publish(sids, X)
+    p5 = partition_of(5, 4)
+    # one session -> one partition, offsets assigned in arrival order
+    assert placed[p5][1] == (3 if p5 == partition_of(9, 4) else 3)
+    got_s, got_x, nxt = br.read(p5, 0, 16)
+    mine = got_s == 5
+    assert np.array_equal(got_x[mine], X[sids == 5])  # FIFO, bit-equal
+    assert nxt == br.high_water(p5)
+    # reading past the high-water mark returns empty at the same offset
+    s2, _, n2 = br.read(p5, nxt, 16)
+    assert len(s2) == 0 and n2 == nxt
+
+
+def test_broker_trim_and_retention_are_loud():
+    br = PubSubBroker(n_partitions=1, retention=4)
+    for i in range(8):
+        br.publish(np.array([1], np.int32), np.full((1, 2), i, np.float32))
+    assert br.depths() == [4]
+    assert br.evicted[0] == 4
+    assert br.base(0) == 4
+    with pytest.raises(LookupError, match="outran retention"):
+        br.read(0, 0, 16)  # consumer fell behind the evicted prefix
+    s, x, nxt = br.read(0, 4, 16)
+    assert x[0, 0] == 4.0 and nxt == 8
+    assert br.trim(0, 6) == 2
+    assert br.base(0) == 6
+
+
+# ------------------------------------------------------------------- wire
+@pytest.mark.timeout(60)
+def test_publisher_reconnect_replays_exactly_once():
+    """The resume protocol: frames lost to a dead wire are replayed by
+    ``connect()``, frames already durable are pruned by the handshake —
+    the broker log ends up with every item exactly once."""
+    br = PubSubBroker(n_partitions=2)
+    with PubSubListener(br, timeout=10.0) as lis:
+        pub = Publisher("127.0.0.1", lis.port, producer_id=7, timeout=10.0)
+        sent = []
+        for i in range(3):
+            sids = np.arange(4, dtype=np.int32)
+            X = np.full((4, 3), i, np.float32)
+            pub.publish(sids, X)
+            sent.append((sids, X))
+        pub._sock.close()  # the wire dies mid-stream
+        frame = (np.array([9], np.int32), np.full((1, 3), 99, np.float32))
+        with pytest.raises(OSError):
+            pub.publish(*frame)  # stays in the replay window
+        pub.connect()  # handshake prunes seqs 1-3, replays seq 4
+        assert pub.reconnects == 1
+        pub.close()
+        sent.append(frame)
+        total = sum(len(s) for s, _ in sent)
+        assert sum(br.high_water(p) for p in range(2)) == total
+        assert lis.last_seq[7] == 4
+
+
+@pytest.mark.timeout(60)
+def test_listener_skips_duplicate_seq_and_acks_durable():
+    """A replayed frame the broker already holds (ack lost on the old
+    wire) is detected by seq, skipped, counted — and still ACKed."""
+    br = PubSubBroker(n_partitions=1)
+    with PubSubListener(br, timeout=10.0) as lis:
+        pub = Publisher("127.0.0.1", lis.port, producer_id=3, timeout=10.0)
+        pub.publish(np.array([1, 1], np.int32), np.zeros((2, 2), np.float32))
+        hw = br.high_water(0)
+        # hand-roll the ack-lost replay: resend seq 1 on the same wire
+        publish_frame(pub._sock, 1, np.array([1, 1], np.int32),
+                      np.zeros((2, 2), np.float32))
+        assert _read_ack(pub._sock) == 1  # acked at the durable seq
+        pub.close()
+        assert br.high_water(0) == hw  # nothing double-published
+        assert lis.duplicates == 1
+
+
+@pytest.mark.timeout(60)
+def test_two_producers_interleave_with_independent_seqs():
+    br = PubSubBroker(n_partitions=2)
+    with PubSubListener(br, timeout=10.0) as lis:
+        a = Publisher("127.0.0.1", lis.port, producer_id=1, timeout=10.0)
+        b = Publisher("127.0.0.1", lis.port, producer_id=2, timeout=10.0)
+        for i in range(3):
+            a.publish(np.array([10], np.int32),
+                      np.full((1, 2), i, np.float32))
+            b.publish(np.array([11], np.int32),
+                      np.full((1, 2), 10 + i, np.float32))
+        a.close()
+        b.close()
+        assert lis.last_seq == {1: 3, 2: 3}
+        total = sum(br.high_water(p) for p in range(2))
+        assert total == 6
+
+
+# ----------------------------------------------------------------- frontend
+class _RecordingRouter:
+    """Stand-in for PodRouter: records every fanned-out item."""
+
+    def __init__(self):
+        self.items = []
+
+    def put(self, sids, X, timeout=None):
+        for sid, row in zip(np.asarray(sids).tolist(), np.asarray(X)):
+            self.items.append((sid, tuple(row.tolist())))
+
+
+def _publish_rounds(br, n_rounds=4, batch=8, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    all_items = []
+    for _ in range(n_rounds):
+        sids = rng.integers(0, 16, size=batch).astype(np.int32)
+        X = rng.normal(size=(batch, d)).astype(np.float32)
+        br.publish(sids, X)
+        all_items += [(int(s), tuple(r.tolist())) for s, r in zip(sids, X)]
+    return all_items
+
+
+def test_frontend_pump_commit_trim_and_exact_resume():
+    br = PubSubBroker(n_partitions=4)
+    published = _publish_rounds(br)
+    router = _RecordingRouter()
+    fe = PubSubFrontEnd(br, router, read_batch=5)
+    n = fe.pump(max_items=10)
+    assert n == 10
+    committed = fe.commit()
+    assert committed == fe.positions()  # commit covers all delivered
+    assert sum(br.depths()) == len(published) - 10  # logs trimmed behind
+    # crash here: a successor built from committed() resumes exactly
+    router2 = _RecordingRouter()
+    fe2 = PubSubFrontEnd(br, router2, start=fe.committed())
+    fe2.pump()
+    got = router.items + router2.items
+    assert sorted(got) == sorted(published)  # no loss, no duplicates
+    assert fe2.lag() == 0
+
+
+def test_frontend_uncommitted_delivery_replays_after_crash():
+    """Delivered-but-uncommitted items re-deliver (at-least-once into
+    the buffers) — the crash window is bounded by the sync-boundary
+    commit cadence, never silent loss."""
+    br = PubSubBroker(n_partitions=2)
+    published = _publish_rounds(br, n_rounds=2)
+    router = _RecordingRouter()
+    fe = PubSubFrontEnd(br, router)
+    fe.pump(max_items=6)  # delivered, NEVER committed
+    router2 = _RecordingRouter()
+    fe2 = PubSubFrontEnd(br, router2, start=fe.committed())  # = broker base
+    fe2.pump()
+    assert sorted(router2.items) == sorted(published)  # full replay
+    assert len(router.items) == 6  # the duplicated window is exactly
+    #                                what was delivered past the commit
+
+
+def test_frontend_below_retention_base_is_loud():
+    br = PubSubBroker(n_partitions=1, retention=4)
+    router = _RecordingRouter()
+    fe = PubSubFrontEnd(br, router)
+    for i in range(10):
+        br.publish(np.array([1], np.int32), np.full((1, 2), i, np.float32))
+    with pytest.raises(LookupError, match="outran retention"):
+        fe.pump()
+
+
+# ------------------------------------------------------- overload fairness
+def _mk_pod(S=4, d=8, batch=16):
+    algo = make("threesieves", d=d, K=4, T=64, eps=0.5)
+    pod = SummarizerPod(algo, sessions=S, chunk=batch)
+    state = pod.init()
+    admit = jax.jit(pod.admit)
+    for sid in range(S):
+        state, _, _ = admit(state, jnp.int32(sid))
+    return pod, state
+
+
+def _offered_stream(rounds=24, hot=0, quiet=(1, 2, 3), hot_per_round=61,
+                    d=8, seed=5):
+    """One hot tenant at ~4x the drain rate, three quiet tenants at one
+    item per round; deterministic, replayed identically by every run."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(rounds):
+        sids = [hot] * hot_per_round + list(quiet)
+        X = rng.normal(size=(len(sids), d)).astype(np.float32)
+        out.append((np.asarray(sids, np.int32), X))
+    return out
+
+
+def _drain_all(pipe, state):
+    pipe.buffer.close()
+    state, _ = pipe.run(state)
+    return state
+
+
+def _fvals_by_sid(pod, state):
+    sid_rows = np.asarray(state.sid)
+    fv = np.asarray(pod.readout(state).fval)
+    return {int(s): fv[i] for i, s in enumerate(sid_rows) if s >= 0}
+
+
+@pytest.mark.timeout(120)
+def test_overload_quiet_tenants_bit_equal_hot_within_bound():
+    """The fairness satellite: at sustained 4x offered load the ladder
+    sheds the hot tenant only — quiet tenants' f-values are bit-equal
+    to the unloaded run, the hot tenant stays within the subsampling
+    bound, and buffer memory stays bounded."""
+    d, batch = 8, 16
+    offered = _offered_stream(d=d)
+
+    # ---- unloaded baseline: everything admitted, everything drained
+    pod, state = _mk_pod(d=d, batch=batch)
+    base_pipe = IngestPipeline(pod=pod, buffer=TaggedBuffer(65536),
+                               batch=batch, get_timeout=30.0)
+    for sids, X in offered:
+        base_pipe.buffer.put(sids, X)
+    state = _drain_all(base_pipe, state)
+    f_base = _fvals_by_sid(pod, state)
+
+    # ---- overloaded run: small buffer + the shed ladder; drain one
+    # device batch (16 items) per offered round of 64 -> sustained 4x
+    pod2, state2 = _mk_pod(d=d, batch=batch)
+    buf = TaggedBuffer(64, policy="drop-newest",
+                       shed=ShedPolicy(lo=0.25, hi=0.6, p_floor=0.1,
+                                       clip_mult=2.0, seed=1))
+    pipe = IngestPipeline(pod=pod2, buffer=buf, batch=batch,
+                          get_timeout=30.0)
+    max_depth = 0
+    for sids, X in offered:
+        buf.put(sids, X)
+        max_depth = max(max_depth, buf.size)
+        state2, _ = pipe.run(state2, max_batches=1)
+    state2 = _drain_all(pipe, state2)
+    f_shed = _fvals_by_sid(pod2, state2)
+
+    # bounded memory: the clip rung holds fill well below capacity
+    assert max_depth <= buf.capacity
+    assert buf.total_drops() == 0  # the ladder absorbed ALL overload —
+    #                                the capacity wall was never hit
+    assert buf.total_sheds() > 0
+    sheds = buf.shed_counts()
+    for q in (1, 2, 3):
+        # quiet tenants: zero sheds, bit-equal summaries
+        assert sheds.get(q, 0) == 0
+        assert f_shed[q] == f_base[q], (
+            f"quiet tenant {q} diverged under load: "
+            f"{f_shed[q]!r} != {f_base[q]!r}")
+    # the hot tenant pays, and only in the subsampling sense: its
+    # thinned stream still summarizes to nearly the unloaded value
+    assert sheds.get(0, 0) > 0
+    assert f_shed[0] >= 0.90 * f_base[0]
+    # the ladder actually escalated (this is an overload run)
+    assert buf.shed_rung_changes() > 0
+
+
+@pytest.mark.timeout(120)
+def test_offsets_resume_exactly_after_producer_reconnect():
+    """End-to-end over the wire: producer -> listener -> broker ->
+    front-end -> router -> pod, with the producer's socket killed
+    mid-stream.  The seq handshake + offset commits make the reconnect
+    run bit-identical to an unbroken one."""
+    d, batch, S = 8, 16, 4
+    rng = np.random.default_rng(11)
+    frames = [(rng.integers(0, S, size=12).astype(np.int32),
+               rng.normal(size=(12, d)).astype(np.float32))
+              for _ in range(8)]
+
+    def run(kill_after=None):
+        pod, state = _mk_pod(S=S, d=d, batch=batch)
+        pipe = IngestPipeline(pod=pod, buffer=TaggedBuffer(4096),
+                              batch=batch, get_timeout=30.0)
+        router = PodRouter({0: pipe})
+        router.assign(np.arange(S), 0)
+        br = PubSubBroker(n_partitions=3)
+        fe = PubSubFrontEnd(br, router)
+        fe.attach(pipe)
+        with PubSubListener(br, timeout=10.0) as lis:
+            pub = Publisher("127.0.0.1", lis.port, producer_id=1,
+                            timeout=10.0)
+            for i, (sids, X) in enumerate(frames):
+                if kill_after is not None and i == kill_after:
+                    pub._sock.close()  # wire dies; next publish fails
+                    with pytest.raises(OSError):
+                        pub.publish(sids, X)
+                    pub.connect()  # replays the lost frame exactly
+                else:
+                    pub.publish(sids, X)
+            pub.close()
+            fe.pump()
+            pipe.buffer.close()
+            state, stats = pipe.run(state)
+            dups = lis.duplicates
+        return (_fvals_by_sid(pod, state), np.asarray(state.items).copy(),
+                stats["pubsub_committed"], dups)
+
+    f_clean, items_clean, committed_clean, _ = run(kill_after=None)
+    f_retry, items_retry, committed_retry, _ = run(kill_after=4)
+    assert f_clean == f_retry  # bit-equal summaries
+    assert np.array_equal(items_clean, items_retry)  # same item counts
+    assert committed_clean == committed_retry  # same final offsets
+
+
+def test_frontend_commit_merges_into_pipeline_stats(monkeypatch):
+    """attach() hooks commit() into the pipeline's sync boundary and
+    the committed offsets surface in run() stats."""
+    d, batch, S = 4, 8, 2
+    pod, state = _mk_pod(S=S, d=d, batch=batch)
+    pipe = IngestPipeline(pod=pod, buffer=TaggedBuffer(1024), batch=batch,
+                          get_timeout=30.0)
+    router = PodRouter({0: pipe})
+    router.assign(np.arange(S), 0)
+    br = PubSubBroker(n_partitions=2)
+    fe = PubSubFrontEnd(br, router)
+    fe.attach(pipe)
+    rng = np.random.default_rng(0)
+    br.publish(rng.integers(0, S, 16).astype(np.int32),
+               rng.normal(size=(16, d)).astype(np.float32))
+    fe.pump()
+    pipe.buffer.close()
+    state, stats = pipe.run(state)
+    assert stats["pubsub_committed"] == fe.committed()
+    assert sum(br.depths()) == 0  # committed prefixes trimmed

@@ -1,0 +1,115 @@
+"""Front-door docs checker: links resolve, named make targets exist.
+
+The README and operator docs are the only part of the repo with no
+compiler — a renamed file or a deleted make target rots there silently
+until a new user hits the 404.  This check gives them one (stdlib-only,
+no new deps; CI's ``docs`` job runs it via ``make docs-check``):
+
+  * every *relative* markdown link / image in the checked docs must
+    resolve to a real file or directory in the repo (``#fragment``
+    suffixes are stripped; absolute ``http(s)://`` and ``mailto:``
+    links are out of scope — we do not hit the network in CI);
+  * every ``DESIGN.md §N`` reference must point at a section heading
+    that actually exists in DESIGN.md;
+  * every ``make <target>`` the docs mention must be a real target in
+    the Makefile — the quickstart must never advertise a command that
+    errors with "No rule to make target".
+
+Exit 0 when clean; exit 1 with one line per finding otherwise.
+
+    python -m tools.check_docs [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+#: docs the front door is built from (globs relative to the repo root)
+DOC_GLOBS = ("README.md", "DESIGN.md", "ROADMAP.md", "docs/*.md",
+             "src/repro/*/README.md")
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_MAKE = re.compile(r"\bmake\s+([a-z][a-z0-9-]*)")
+_SECTION = re.compile(r"DESIGN\.md\s+§§?\s*(\d+)(?:[-–](\d+))?")
+_CODE_FENCE = re.compile(r"^```", re.M)
+#: make words that follow "make" in prose but are not targets
+_MAKE_STOPWORDS = {"a", "an", "it", "its", "of", "sure", "the", "them",
+                   "this", "two", "up", "no", "one", "every", "each",
+                   "target", "targets"}
+
+
+def _make_targets(root: Path) -> set:
+    mk = root / "Makefile"
+    if not mk.exists():
+        return set()
+    targets = set()
+    for line in mk.read_text().splitlines():
+        m = re.match(r"^([A-Za-z0-9_.-]+(?:\s+[A-Za-z0-9_.-]+)*)\s*:(?!=)", line)
+        if m and not line.startswith("\t"):
+            targets.update(m.group(1).split())
+        if line.startswith(".PHONY:"):
+            targets.update(line.split(":", 1)[1].split())
+    return targets
+
+
+def _design_sections(root: Path) -> set:
+    design = root / "DESIGN.md"
+    if not design.exists():
+        return set()
+    return {int(m.group(1)) for m in
+            re.finditer(r"^#+\s*§?\s*(\d+)[.:)\s]", design.read_text(), re.M)}
+
+
+def check(root: Path) -> List[str]:
+    problems: List[str] = []
+    targets = _make_targets(root)
+    sections = _design_sections(root)
+    docs: List[Path] = []
+    for g in DOC_GLOBS:
+        docs.extend(sorted(root.glob(g)))
+    if not any(d.name == "README.md" and d.parent == root for d in docs):
+        problems.append("README.md: missing at the repo root")
+    for doc in docs:
+        text = doc.read_text()
+        rel = doc.relative_to(root)
+        for m in _LINK.finditer(text):
+            href = m.group(1)
+            if href.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target = (doc.parent / href.split("#", 1)[0]).resolve()
+            if not target.exists():
+                problems.append(f"{rel}: broken link -> {href}")
+        for m in _MAKE.finditer(text):
+            tgt = m.group(1)
+            if tgt in _MAKE_STOPWORDS:
+                continue
+            if tgt not in targets:
+                problems.append(f"{rel}: unknown make target -> {tgt}")
+        for m in _SECTION.finditer(text):
+            lo = int(m.group(1))
+            hi = int(m.group(2)) if m.group(2) else lo
+            for n in range(lo, hi + 1):
+                if sections and n not in sections:
+                    problems.append(f"{rel}: DESIGN.md §{n} does not exist")
+    return problems
+
+
+def main(argv: List[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(argv[0]).resolve() if argv else Path(__file__).resolve().parents[1]
+    problems = check(root)
+    for p in problems:
+        print(p)
+    n_docs = sum(len(list(root.glob(g))) for g in DOC_GLOBS)
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s) in {n_docs} doc(s)")
+        return 1
+    print(f"check_docs: {n_docs} doc(s) clean "
+          f"({len(_make_targets(root))} make targets known)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
